@@ -1,0 +1,28 @@
+"""Shared helpers for the benchmark harness (CSV conventions)."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=float)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-30)))))
+
+
+def timeit(fn, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us

@@ -1,0 +1,3 @@
+"""Architecture configs: the 10 assigned LM archs + the paper's GNNs."""
+from repro.configs.registry import (ARCHS, SHAPES, get_arch, get_shape,
+                                    smoke_config)  # noqa: F401

@@ -1,0 +1,97 @@
+"""Runtime Analyzer: dynamic kernel-to-primitive mapping (Algorithm 7).
+
+For a computation task Z_ij = sum_t X_it @ Y_tj, the Analyzer fetches the
+densities of every partition pair and picks the target primitive (and buffer
+assignment, which on TPU becomes "which operand is the gathered/sparse one").
+Runs on the host in host-runtime mode (the soft processor role) and as traced
+jnp in fused mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perf_model import FPGACostModel, Primitive, TPUCostModel
+
+CostModel = object  # FPGACostModel | TPUCostModel (duck-typed)
+
+
+@dataclasses.dataclass
+class TaskPlan:
+    """K2P decision for one task (one output partition Z_ij)."""
+
+    i: int
+    k: int
+    primitives: np.ndarray        # (K,) Primitive codes per reduction step
+    sparse_is_lhs: np.ndarray     # (K,) bool: which operand goes to BufferU
+    est_cost: float               # predicted cycles/seconds for the task
+
+    @property
+    def skipped(self) -> int:
+        return int(np.sum(self.primitives == Primitive.SKIP))
+
+
+def plan_task(
+    model: CostModel,
+    dens_x_row: np.ndarray,     # (K,) densities of X_i,1..K
+    dens_y_col: np.ndarray,     # (K,) densities of Y_1..K,j
+    dims: Tuple[int, int, int],
+    i: int = 0,
+    k: int = 0,
+) -> TaskPlan:
+    """Algorithm 7 over all reduction steps of one task (host-side)."""
+    m, n, d = dims
+    K = len(dens_x_row)
+    prims = np.empty((K,), np.int32)
+    sparse_lhs = np.zeros((K,), bool)
+    cost = 0.0
+    for t in range(K):
+        ax, ay = float(dens_x_row[t]), float(dens_y_col[t])
+        p = model.select(ax, ay)
+        prims[t] = p
+        # Alg. 7: the sparser operand goes to BufferU (is the gathered one)
+        sparse_lhs[t] = ax <= ay
+        cost += float(model.cycles(p, m, n, d, ax, ay))
+    return TaskPlan(i=i, k=k, primitives=prims, sparse_is_lhs=sparse_lhs,
+                    est_cost=cost)
+
+
+def plan_kernel(
+    model: CostModel,
+    dens_x: np.ndarray,   # (I, K) block densities of X
+    dens_y: np.ndarray,   # (K, J) block densities of Y
+    block_dims: Tuple[int, int, int],
+) -> List[TaskPlan]:
+    """K2P for every task of a kernel.  O(I*J*K) scalars -- the paper's
+    'small overhead compared with the computation complexity of a task'."""
+    I, K = dens_x.shape
+    K2, J = dens_y.shape
+    assert K == K2, (dens_x.shape, dens_y.shape)
+    return [
+        plan_task(model, dens_x[i], dens_y[:, j], block_dims, i=i, k=j)
+        for i in range(I)
+        for j in range(J)
+    ]
+
+
+def plan_kernel_traced(model, dens_x: jnp.ndarray, dens_y: jnp.ndarray) -> jnp.ndarray:
+    """Traced K2P: (I, K) x (K, J) -> (I, J, K) int32 primitive codes.
+
+    Used by fused-mode dynasparse_matmul inside jit.
+    """
+    ax = dens_x[:, None, :]            # (I, 1, K)
+    ay = jnp.swapaxes(dens_y, 0, 1)[None, :, :]  # (1, J, K)
+    ax, ay = jnp.broadcast_arrays(ax, ay)
+    return model.select_traced(ax, ay)
+
+
+def primitive_histogram(plans: List[TaskPlan]) -> np.ndarray:
+    """Counts of [SKIP, GEMM, SPDMM, SPMM] across all reduction steps."""
+    hist = np.zeros((4,), np.int64)
+    for p in plans:
+        for v in p.primitives:
+            hist[int(v)] += 1
+    return hist

@@ -1,0 +1,142 @@
+"""Fused-mode dynasparse matmul: dynamic K2P dispatch inside one ``jit``.
+
+This is the form of the paper's mechanism that can live INSIDE a compiled
+train/serve step, where a host round-trip per layer (the soft-processor loop
+of ``core.runtime``) is unacceptable.  The whole pipeline --
+
+    profile block densities  ->  Algorithm 7 (traced)  ->  per-task
+    ``lax.switch`` over primitive branches inside a ``lax.scan`` task loop
+
+-- is traced once; at runtime ``lax.switch`` executes ONLY the selected
+branch, so an all-zero block pair costs no MACs (SKIP branch), which is real
+data-dependent work elision under XLA's static shapes.  With
+``use_kernels=True`` the non-dense branches call the Pallas block-sparse
+kernels, whose clamped-index masked loops additionally scale *within-block*
+cost by tile density (the TPU-granularity analogue of the FPGA's
+element-granularity skipping; see DESIGN.md section 2).
+
+The scan-over-tasks structure mirrors Algorithm 8: each scan step is one
+"task" (an output partition); on a real mesh the task loop is sharded over
+chips by ``shard_map`` so chips play the role of Computation Cores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import profiler
+from repro.core.perf_model import FPGACostModel, Primitive, TPUCostModel
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class DynasparseResult:
+    out: jnp.ndarray
+    codes: jnp.ndarray          # (I, J, K) int32 Primitive per reduction step
+    dens_x: jnp.ndarray         # (I, K) block densities of X
+    dens_y: jnp.ndarray         # (K, J) block densities of Y
+
+
+jax.tree_util.register_pytree_node(
+    DynasparseResult,
+    lambda r: ((r.out, r.codes, r.dens_x, r.dens_y), None),
+    lambda _, leaves: DynasparseResult(*leaves),
+)
+
+
+def _block_tensor(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """(M, N) -> (Mb, Nb, bm, bn), zero-padding to block multiples."""
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    mb, nb = x.shape[0] // bm, x.shape[1] // bn
+    return x.reshape(mb, bm, nb, bn).transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "cost_model", "use_kernels", "tile", "unroll"))
+def dynasparse_matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    block: Tuple[int, int, int] = (128, 128, 128),
+    cost_model=FPGACostModel(),
+    use_kernels: bool = False,
+    tile: Tuple[int, int] = (128, 128),
+    unroll: int = 1,
+) -> DynasparseResult:
+    """``x @ y`` with per-(partition pair) dynamic primitive dispatch.
+
+    block = (bm, bk, bn): X is partitioned (bm x bk), Y (bk x bn) -- the
+    paper's N1/N2 partitions.  ``cost_model.select_traced`` supplies the K2P
+    rule (FPGA Table IV rule or the TPU tile-density rule).
+    """
+    m, n = x.shape[0], y.shape[1]
+    bm, bk, bn = block
+    xb = _block_tensor(x, bm, bk)            # (I, K, bm, bk)
+    yb = _block_tensor(y, bk, bn)            # (K, J, bk, bn)
+    I, K = xb.shape[:2]
+    J = yb.shape[1]
+
+    dens_x = jnp.mean(xb != 0, axis=(2, 3))  # (I, K)
+    dens_y = jnp.mean(yb != 0, axis=(2, 3))  # (K, J)
+    codes = cost_model.select_traced(
+        dens_x[:, None, :], jnp.swapaxes(dens_y, 0, 1)[None, :, :])  # (I,J,K)
+
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+
+    def _skip(acc, xk, yk):
+        del xk, yk
+        return acc
+
+    def _gemm(acc, xk, yk):
+        if use_kernels:
+            return acc + ops.gemm(xk, yk, tile=(tile[0], tile[1], tile[1])
+                                  ).astype(jnp.float32)
+        return acc + jnp.dot(xk, yk, preferred_element_type=jnp.float32)
+
+    def _spdmm(acc, xk, yk):
+        if use_kernels:
+            return acc + ops.spdmm(xk, yk, tile=tile, bn=tile[1]
+                                   ).astype(jnp.float32)
+        return acc + jnp.dot(xk, yk, preferred_element_type=jnp.float32)
+
+    def _spmm(acc, xk, yk):
+        if use_kernels:
+            return acc + ops.spmm(xk, yk, tile=tile).astype(jnp.float32)
+        return acc + jnp.dot(xk, yk, preferred_element_type=jnp.float32)
+
+    branches = (_skip, _gemm, _spdmm, _spmm)
+
+    def task(_, ij):
+        i, j = ij // J, ij % J
+        xrow = jax.lax.dynamic_index_in_dim(xb, i, 0, keepdims=False)
+        ycol = jax.lax.dynamic_index_in_dim(yb, j, 1, keepdims=False)
+        code_ij = jax.lax.dynamic_index_in_dim(
+            jax.lax.dynamic_index_in_dim(codes, i, 0, False), j, 0, False)
+
+        def red(k, acc):
+            xk = jax.lax.dynamic_index_in_dim(xrow, k, 0, False)
+            yk = jax.lax.dynamic_index_in_dim(ycol, k, 0, False)
+            return jax.lax.switch(code_ij[k], branches, acc, xk, yk)
+
+        acc = jax.lax.fori_loop(
+            0, K, red, jnp.zeros((bm, bn), jnp.float32), unroll=unroll)
+        return None, acc.astype(out_dtype)
+
+    _, blocks = jax.lax.scan(task, None, jnp.arange(I * J))
+    out = blocks.reshape(I, J, bm, bn).transpose(0, 2, 1, 3)
+    out = out.reshape(I * bm, J * bn)[:m, :n]
+    return DynasparseResult(out, codes, dens_x, dens_y)
+
+
+def dynasparse_dense_equivalent(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: the dispatch NEVER changes the value, only the cost."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)).astype(
+        jnp.promote_types(x.dtype, y.dtype))

@@ -1,0 +1,239 @@
+"""Data formats & transformations (paper Section V-A / V-B2).
+
+The paper stores matrices in dense or COO format and converts between them
+with a log-depth prefix-sum compaction network (D2S) / its inverse (S2D).
+On TPU the same prefix-sum algorithm vectorizes to ``cumsum`` + scatter; all
+converters here are jit-compatible with *static* capacity (``max_nnz``) and a
+runtime validity count -- the standard padded-sparse idiom on accelerators.
+
+Block-level formats: the TPU adaptation skips zero *tiles*, so we also keep a
+BlockCOO/BlockCSR view: per-(row-panel) sorted nonzero tile-column indices
+plus the dense tile payload, which is what the spdmm/spmm Pallas kernels
+consume via scalar prefetch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class COOMatrix:
+    """Padded COO: entries [0, nnz) are valid; the rest are (0, 0, 0.0).
+
+    Rows/cols are int32; row-major sorted (row, then col) as the paper
+    requires for SpDMM/SPMM operands.
+    """
+
+    rows: jnp.ndarray      # (capacity,) int32
+    cols: jnp.ndarray      # (capacity,) int32
+    values: jnp.ndarray    # (capacity,) dtype
+    nnz: jnp.ndarray       # () int32
+    shape: Tuple[int, int]
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[0]
+
+    def density(self) -> jnp.ndarray:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+
+jax.tree_util.register_pytree_node(
+    COOMatrix,
+    lambda m: ((m.rows, m.cols, m.values, m.nnz), m.shape),
+    lambda shape, leaves: COOMatrix(*leaves, shape=shape),
+)
+
+
+@dataclasses.dataclass
+class BlockCSRMatrix:
+    """Tile-level CSR over a (Mb x Kb) tile grid.
+
+    ``col_idx[i, s]`` is the tile-column of the s-th nonzero tile in tile-row
+    i (sorted ascending; entries >= counts[i] are padding = 0).
+    ``blocks[i, s]`` is the dense (T_m, T_k) payload of that tile.
+    """
+
+    col_idx: jnp.ndarray   # (Mb, Smax) int32
+    counts: jnp.ndarray    # (Mb,) int32  -- nnz tiles per tile-row
+    blocks: jnp.ndarray    # (Mb, Smax, T_m, T_k)
+    shape: Tuple[int, int]
+    tile: Tuple[int, int]
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (-(-self.shape[0] // self.tile[0]), -(-self.shape[1] // self.tile[1]))
+
+    def tile_density(self) -> jnp.ndarray:
+        mb, kb = self.grid
+        return jnp.sum(self.counts) / (mb * kb)
+
+
+jax.tree_util.register_pytree_node(
+    BlockCSRMatrix,
+    lambda m: ((m.col_idx, m.counts, m.blocks), (m.shape, m.tile)),
+    lambda aux, leaves: BlockCSRMatrix(*leaves, shape=aux[0], tile=aux[1]),
+)
+
+
+# --------------------------------------------------------------------------
+# Dense <-> COO (the D2S / S2D modules).
+# --------------------------------------------------------------------------
+
+def dense_to_coo(x: jnp.ndarray, capacity: Optional[int] = None) -> COOMatrix:
+    """D2S: prefix-sum compaction of nonzeros into padded COO (row-major).
+
+    Mirrors the paper's D2S module: the shift amount of each element is the
+    number of zeros before it, i.e. position = prefix-sum of the nonzero
+    indicator.  We express the log(n)-stage shift network as one cumsum +
+    scatter, which is its SIMD equivalent.
+    """
+    m, n = x.shape
+    capacity = int(capacity if capacity is not None else m * n)
+    flat = x.reshape(-1)
+    mask = flat != 0
+    nnz = jnp.sum(mask).astype(jnp.int32)
+    # prefix-sum compaction: destination slot of element i (clamped into pad)
+    dest = jnp.where(mask, jnp.cumsum(mask) - 1, capacity)
+    dest = jnp.minimum(dest, capacity)  # out-of-capacity nonzeros drop into pad
+    lin = jnp.arange(m * n, dtype=jnp.int32)
+    rows_src = lin // n
+    cols_src = lin % n
+    rows = jnp.zeros((capacity + 1,), jnp.int32).at[dest].set(rows_src.astype(jnp.int32))
+    cols = jnp.zeros((capacity + 1,), jnp.int32).at[dest].set(cols_src.astype(jnp.int32))
+    vals = jnp.zeros((capacity + 1,), x.dtype).at[dest].set(flat)
+    return COOMatrix(rows[:capacity], cols[:capacity], vals[:capacity],
+                     jnp.minimum(nnz, capacity), (m, n))
+
+
+def coo_to_dense(coo: COOMatrix) -> jnp.ndarray:
+    """S2D: scatter valid COO entries back into a dense matrix."""
+    m, n = coo.shape
+    valid = jnp.arange(coo.capacity) < coo.nnz
+    vals = jnp.where(valid, coo.values, 0)
+    # invalid entries all scatter-add 0 to (0, 0): harmless.
+    rows = jnp.where(valid, coo.rows, 0)
+    cols = jnp.where(valid, coo.cols, 0)
+    out = jnp.zeros((m, n), coo.values.dtype)
+    return out.at[rows, cols].add(vals)
+
+
+# --------------------------------------------------------------------------
+# Dense <-> BlockCSR (tile-level, for the TPU kernels).
+# --------------------------------------------------------------------------
+
+def _pad_to_tiles(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:
+    m, n = x.shape
+    tm, tn = tile
+    pm, pn = (-m) % tm, (-n) % tn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def tile_view(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:
+    """(M, N) -> (Mb, Nb, tm, tn) tile tensor (pads to tile multiples)."""
+    x = _pad_to_tiles(x, tile)
+    m, n = x.shape
+    tm, tn = tile
+    return x.reshape(m // tm, tm, n // tn, tn).transpose(0, 2, 1, 3)
+
+
+def untile_view(tiles: jnp.ndarray, shape: Tuple[int, int]) -> jnp.ndarray:
+    mb, nb, tm, tn = tiles.shape
+    full = tiles.transpose(0, 2, 1, 3).reshape(mb * tm, nb * tn)
+    return full[: shape[0], : shape[1]]
+
+
+def dense_to_bcsr(x: jnp.ndarray, tile: Tuple[int, int],
+                  smax: Optional[int] = None) -> BlockCSRMatrix:
+    """Compact nonzero tiles of each tile-row (prefix-sum compaction again)."""
+    tiles = tile_view(x, tile)                      # (Mb, Kb, tm, tk)
+    mb, kb = tiles.shape[:2]
+    smax = int(smax if smax is not None else kb)
+    nz = jnp.any(tiles != 0, axis=(2, 3))           # (Mb, Kb) tile occupancy
+    counts = jnp.sum(nz, axis=1).astype(jnp.int32)
+    dest = jnp.where(nz, jnp.cumsum(nz, axis=1) - 1, smax)
+    dest = jnp.minimum(dest, smax)
+    row_ids = jnp.broadcast_to(jnp.arange(mb)[:, None], (mb, kb))
+    col_ids = jnp.broadcast_to(jnp.arange(kb)[None, :], (mb, kb))
+    col_idx = (
+        jnp.zeros((mb, smax + 1), jnp.int32)
+        .at[row_ids, dest].set(col_ids.astype(jnp.int32))[:, :smax]
+    )
+    blocks = (
+        jnp.zeros((mb, smax + 1) + tiles.shape[2:], x.dtype)
+        .at[row_ids, dest].set(tiles)[:, :smax]
+    )
+    return BlockCSRMatrix(col_idx, jnp.minimum(counts, smax), blocks,
+                          shape=x.shape, tile=tile)
+
+
+@dataclasses.dataclass
+class BlockCSCMatrix:
+    """Tile-level CSC over a (Kb x Nb) tile grid (for SPMM's right operand).
+
+    ``row_idx[j, s]`` is the tile-row of the s-th nonzero tile in tile-column
+    j; ``blocks[j, s]`` its (T_k, T_n) payload (NOT transposed).
+    """
+
+    row_idx: jnp.ndarray   # (Nb, Smax) int32
+    counts: jnp.ndarray    # (Nb,) int32
+    blocks: jnp.ndarray    # (Nb, Smax, T_k, T_n)
+    shape: Tuple[int, int]
+    tile: Tuple[int, int]
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (-(-self.shape[0] // self.tile[0]), -(-self.shape[1] // self.tile[1]))
+
+
+jax.tree_util.register_pytree_node(
+    BlockCSCMatrix,
+    lambda m: ((m.row_idx, m.counts, m.blocks), (m.shape, m.tile)),
+    lambda aux, leaves: BlockCSCMatrix(*leaves, shape=aux[0], tile=aux[1]),
+)
+
+
+def dense_to_bcsc(x: jnp.ndarray, tile: Tuple[int, int],
+                  smax: Optional[int] = None) -> BlockCSCMatrix:
+    """Compact nonzero tiles of each tile-COLUMN (transposed grid walk;
+    tile payloads stay untransposed so the MXU contraction is direct)."""
+    tiles = tile_view(x, tile)                      # (Kb, Nb, tk, tn)
+    kb, nb = tiles.shape[:2]
+    smax = int(smax if smax is not None else kb)
+    nz = jnp.any(tiles != 0, axis=(2, 3))           # (Kb, Nb)
+    counts = jnp.sum(nz, axis=0).astype(jnp.int32)  # per column
+    dest = jnp.where(nz, jnp.cumsum(nz, axis=0) - 1, smax)
+    dest = jnp.minimum(dest, smax)
+    row_ids = jnp.broadcast_to(jnp.arange(kb)[:, None], (kb, nb))
+    col_ids = jnp.broadcast_to(jnp.arange(nb)[None, :], (kb, nb))
+    row_idx = (
+        jnp.zeros((nb, smax + 1), jnp.int32)
+        .at[col_ids, dest].set(row_ids.astype(jnp.int32))[:, :smax]
+    )
+    blocks = (
+        jnp.zeros((nb, smax + 1) + tiles.shape[2:], x.dtype)
+        .at[col_ids, dest].set(tiles)[:, :smax]
+    )
+    pad_shape = (kb * tile[0], nb * tile[1])
+    return BlockCSCMatrix(row_idx, jnp.minimum(counts, smax), blocks,
+                          shape=pad_shape, tile=tile)
+
+
+def bcsr_to_dense(b: BlockCSRMatrix) -> jnp.ndarray:
+    mb, kb = b.grid
+    smax = b.col_idx.shape[1]
+    tiles = jnp.zeros((mb, kb) + b.blocks.shape[2:], b.blocks.dtype)
+    valid = jnp.arange(smax)[None, :] < b.counts[:, None]
+    cols = jnp.where(valid, b.col_idx, kb)  # invalid -> scratch col kb
+    row_ids = jnp.broadcast_to(jnp.arange(mb)[:, None], (mb, smax))
+    tiles = jnp.concatenate([tiles, jnp.zeros((mb, 1) + tiles.shape[2:], tiles.dtype)], 1)
+    vals = jnp.where(valid[..., None, None], b.blocks, 0)
+    tiles = tiles.at[row_ids, cols].add(vals)[:, :kb]
+    return untile_view(tiles, b.shape)

@@ -1,0 +1,111 @@
+"""Intermediate representation (paper Section IV-A, Table II).
+
+The compiler turns a GNN model spec + graph meta data into a *computation
+graph* whose nodes are Kernel IRs (Aggregate / Update) and whose edges are
+data dependencies.  Each kernel IR carries the meta data of Table II plus the
+execution-scheme metadata produced by data partitioning (Algorithms 2/3/9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+
+class KernelType(enum.IntEnum):
+    AGGREGATE = 0
+    UPDATE = 1
+    # element-wise epilogues are folded into the producing kernel (the FPGA
+    # applies activation on the writeback path); kept for IR completeness:
+    ELEMENTWISE = 2
+
+
+class AggOp(enum.Enum):
+    SUM = "sum"
+    MEAN = "mean"
+    MAX = "max"
+    MIN = "min"
+
+
+class Activation(enum.Enum):
+    NONE = "none"
+    RELU = "relu"
+    PRELU = "prelu"
+
+
+@dataclasses.dataclass
+class ExecutionScheme:
+    """Partitioning metadata (Algorithms 2/3): the task grid of a kernel."""
+
+    n1: int = 0                      # adjacency / fiber partition size
+    n2: int = 0                      # feature / weight partition size
+    grid_i: int = 0                  # output row-partition count
+    grid_k: int = 0                  # output col-partition count
+    grid_j: int = 0                  # reduction partition count
+    num_tasks: int = 0               # grid_i * grid_k
+
+    def as_tuple(self) -> Tuple[int, int, int]:
+        return (self.grid_i, self.grid_k, self.grid_j)
+
+
+@dataclasses.dataclass
+class KernelIR:
+    """Table II meta data for one kernel."""
+
+    kernel_type: KernelType
+    layer_id: int
+    f_in: int
+    f_out: int
+    n_vertices: int
+    n_edges: int
+    agg_op: AggOp = AggOp.SUM
+    activation: Activation = Activation.NONE
+    activation_enabled: bool = False
+    name: str = ""
+    # operand bindings: names in the runtime's tensor environment
+    lhs: str = ""                    # "A" for Aggregate, feature name for Update
+    rhs: str = ""                    # feature name for Aggregate, weight name for Update
+    out: str = ""
+    # extra epilogue: residual add (GIN's (1+eps)h + agg, SAGE self path)
+    epilogue_add: Optional[str] = None
+    epilogue_scale: float = 1.0
+    scheme: ExecutionScheme = dataclasses.field(default_factory=ExecutionScheme)
+
+    @property
+    def matmul_dims(self) -> Tuple[int, int, int]:
+        """(m, n, d) of the underlying matrix product."""
+        if self.kernel_type == KernelType.AGGREGATE:
+            return (self.n_vertices, self.n_vertices, self.f_in)
+        return (self.n_vertices, self.f_in, self.f_out)
+
+    @property
+    def workload(self) -> int:
+        """Q in Algorithm 9: |V| * f for the kernel's output."""
+        m, _, d = self.matmul_dims
+        return m * d
+
+
+@dataclasses.dataclass
+class ComputationGraph:
+    """Nodes = kernel IRs, edges = data dependencies (by tensor names)."""
+
+    kernels: List[KernelIR]
+    model_name: str = ""
+    graph_name: str = ""
+
+    def topo_order(self) -> List[KernelIR]:
+        """Kernels are emitted in topological order by the compiler."""
+        return list(self.kernels)
+
+    def edges(self) -> List[Tuple[int, int]]:
+        produced: Dict[str, int] = {}
+        out = []
+        for i, k in enumerate(self.kernels):
+            for dep in (k.lhs, k.rhs, k.epilogue_add):
+                if dep in produced:
+                    out.append((produced[dep], i))
+            produced[k.out] = i
+        return out
+
+    def __len__(self) -> int:
+        return len(self.kernels)

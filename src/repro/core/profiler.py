@@ -1,0 +1,98 @@
+"""Sparsity profiling (paper Section V-B2, "Sparsity Profiler").
+
+The FPGA profiles density with a comparator array + adder tree at the Result
+Buffer's output port, i.e. counting is fused into writeback and is free.  In
+XLA the analogous property holds: a ``count_nonzero`` over a value that is
+being written anyway fuses into the producing kernel.  The Pallas kernels in
+``repro.kernels`` additionally emit per-tile counts as a side output
+(``kernels/profile.py``) to demonstrate the fused-at-writeback form.
+
+Everything here is jit-compatible.  Host-side summaries (``SparsityStats``)
+are tiny -- O(#blocks) scalars -- mirroring the sparsity messages the
+accelerator sends to the soft processor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def element_density(x: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of nonzero elements of the whole matrix (scalar)."""
+    return jnp.count_nonzero(x) / x.size
+
+
+def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
+    """Per-block element density.  (M, N) -> (Mb, Nb) in [0, 1].
+
+    Blocks are the paper's data partitions (N1/N2 sized); the Analyzer makes
+    one K2P decision per partition pair from these numbers.
+    """
+    m, n = x.shape
+    bm, bn = block
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    mb, nb = x.shape[0] // bm, x.shape[1] // bn
+    nz = (x != 0).reshape(mb, bm, nb, bn)
+    counts = jnp.sum(nz, axis=(1, 3))
+    # density relative to the *unpadded* elements actually inside each block
+    rows_in = jnp.clip(m - jnp.arange(mb) * bm, 0, bm)
+    cols_in = jnp.clip(n - jnp.arange(nb) * bn, 0, bn)
+    sizes = rows_in[:, None] * cols_in[None, :]
+    return counts / jnp.maximum(sizes, 1)
+
+
+def tile_occupancy(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:
+    """Per-block *tile* density: fraction of nonzero tiles.  (M,N) -> (Mb,Nb)
+    of 0/1 floats at tile granularity (a tile is occupied iff any nonzero)."""
+    return (block_density(x, tile) > 0).astype(jnp.float32)
+
+
+def block_tile_density(x: jnp.ndarray, block: Tuple[int, int],
+                       tile: Tuple[int, int]) -> jnp.ndarray:
+    """Fraction of nonzero (tile x tile) sub-tiles inside each block.
+
+    This is the beta that drives the TPUCostModel: block (N1 or N2 sized)
+    partitions are the K2P decision unit, tiles (128-aligned) are the
+    skippable compute unit inside the Pallas kernels.
+    """
+    occ = tile_occupancy(x, tile)                        # (Mt, Nt) 0/1
+    bm, bn = block[0] // tile[0], block[1] // tile[1]
+    return block_density_from_mask(occ, (bm, bn))
+
+
+def block_density_from_mask(mask: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
+    m, n = mask.shape
+    bm, bn = block
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        mask = jnp.pad(mask, ((0, pm), (0, pn)))
+    mb, nb = mask.shape[0] // bm, mask.shape[1] // bn
+    return jnp.mean(mask.reshape(mb, bm, nb, bn), axis=(1, 3))
+
+
+@dataclasses.dataclass
+class SparsityStats:
+    """Host-side summary for one matrix (what the soft processor caches)."""
+
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+    density: float                  # whole-matrix element density
+    block_densities: np.ndarray     # (Mb, Nb) element densities per partition
+
+    @classmethod
+    def measure(cls, x, block: Tuple[int, int]) -> "SparsityStats":
+        bd = np.asarray(block_density(jnp.asarray(x), block))
+        return cls(shape=tuple(x.shape), block=block,
+                   density=float(np.asarray(element_density(jnp.asarray(x)))),
+                   block_densities=bd)
+
+    @classmethod
+    def from_predicted(cls, shape, block, block_densities) -> "SparsityStats":
+        bd = np.asarray(block_densities)
+        return cls(shape=tuple(shape), block=tuple(block),
+                   density=float(bd.mean()), block_densities=bd)

@@ -1,0 +1,370 @@
+"""Host-runtime engine: the soft processor's runtime system (Section VI).
+
+Two entry points:
+
+* :class:`DynasparseEngine` -- executes a compiled GNN (IR from
+  ``core.compiler``) with REAL numerics: per kernel it profiles block
+  densities, runs the Analyzer (Algorithm 7 or a static strategy), schedules
+  tasks over the Computation Cores (Algorithm 8), and dispatches each
+  reduction step to the selected primitive.  The Python host plays the
+  MicroBlaze's role; JAX's async dispatch gives the paper's "K2P of kernel
+  l+1 overlaps execution of kernel l" for free.
+
+* :func:`simulate_inference` -- pure cost-model execution (no numerics):
+  given per-tensor density statistics it produces the predicted latency of a
+  strategy on the paper's FPGA (or the TPU model).  This is how the
+  paper-table benchmarks evaluate graphs whose dense materialization would
+  not fit this container (NELL/Reddit), mirroring how the paper's own
+  latency derives from its Table IV model + measured densities + Alg. 8
+  load balance.
+
+Strategies (Section VIII-B):
+  dynamic -- Algorithm 7 (the contribution)
+  s1      -- HyGCN/BoostGCN: Aggregate->SpDMM, Update->GEMM
+  s2      -- AWB-GCN: everything->SpDMM
+  gemm    -- everything dense (CPU/GPU-library-style lower bound)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyzer, scheduler
+from repro.core.compiler import CompiledModel
+from repro.core.ir import Activation, AggOp, KernelIR, KernelType
+from repro.core.perf_model import (FPGACostModel, Primitive,
+                                   predict_output_density)
+from repro.core.profiler import SparsityStats, block_density
+from repro.kernels import ops
+
+# instructions the soft processor spends per K2P decision (Alg. 7 is a few
+# compares + buffer assignment); 500 MIPS MicroBlaze (Section VII).
+_K2P_INSTRUCTIONS = 32
+_SOFT_PROC_IPS = 500e6
+
+
+def strategy_primitive(strategy: str, kernel: KernelIR, a_x: float,
+                       a_y: float, model) -> Primitive:
+    """Map one partition pair under a named strategy."""
+    if strategy == "dynamic":
+        return model.select(a_x, a_y)
+    if strategy == "s1":
+        return (Primitive.SPDMM if kernel.kernel_type == KernelType.AGGREGATE
+                else Primitive.GEMM)
+    if strategy == "s2":
+        return Primitive.SPDMM
+    if strategy == "gemm":
+        return Primitive.GEMM
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+@dataclasses.dataclass
+class KernelReport:
+    name: str
+    num_tasks: int
+    histogram: np.ndarray            # [SKIP, GEMM, SPDMM, SPMM] step counts
+    makespan_cycles: float           # predicted, after Alg. 8 scheduling
+    utilization: float
+    k2p_seconds: float               # modeled soft-processor time
+    wall_seconds: float = 0.0        # host wall clock (real-exec mode only)
+
+
+@dataclasses.dataclass
+class InferenceReport:
+    kernels: List[KernelReport]
+    strategy: str
+
+    @property
+    def total_cycles(self) -> float:
+        return float(sum(k.makespan_cycles for k in self.kernels))
+
+    def total_seconds(self, freq_hz: float) -> float:
+        return self.total_cycles / freq_hz
+
+    @property
+    def k2p_seconds(self) -> float:
+        return float(sum(k.k2p_seconds for k in self.kernels))
+
+    @property
+    def histogram(self) -> np.ndarray:
+        return np.sum([k.histogram for k in self.kernels], axis=0)
+
+
+def kernel_block_dims(kernel: KernelIR) -> Tuple[int, int, int]:
+    """(bm, bk, bn) partition dims of one task's matmul steps.
+
+    Aggregate (Alg. 2): A blocks N1xN1 x H fibers N1xN2 -> out N1xN2.
+    Update   (Alg. 3): H subfibers N2xN2 x W blocks N2xN2 -> out N2xN2.
+    """
+    s = kernel.scheme
+    if kernel.kernel_type == KernelType.AGGREGATE:
+        return (s.n1, s.n1, s.n2)
+    return (s.n2, s.n2, s.n2)
+
+
+def _plan_kernel(kernel: KernelIR, dens_x: np.ndarray, dens_y: np.ndarray,
+                 strategy: str, model) -> Tuple[np.ndarray, np.ndarray]:
+    """K2P codes + per-task predicted cost for all tasks of one kernel.
+
+    dens_x: (I, K) block densities of the lhs; dens_y: (K, J) of the rhs.
+    Vectorized over the whole (I, J, K) decision grid (the soft processor
+    does this serially; a few np ops keep the benchmark harness fast).
+    """
+    bm, bk, bn = kernel_block_dims(kernel)
+    I, K = dens_x.shape
+    J = dens_y.shape[1]
+    codes = np.empty((I, J, K), np.int32)
+    costs = np.empty((I, J), np.float64)
+    # chunk over output rows: NELL-sized decision grids (I*J*K ~ 1e7+) would
+    # otherwise materialize multi-GB temporaries.
+    chunk = max(1, int(2e6 / max(J * K, 1)))
+    for i0 in range(0, I, chunk):
+        i1 = min(i0 + chunk, I)
+        ax = np.broadcast_to(dens_x[i0:i1, None, :],
+                             (i1 - i0, J, K)).astype(np.float64)
+        ay = np.broadcast_to(dens_y.T[None, :, :],
+                             (i1 - i0, J, K)).astype(np.float64)
+        if strategy == "dynamic":
+            c = np.asarray(model.select_traced(jnp.asarray(ax),
+                                               jnp.asarray(ay)), np.int32)
+        elif strategy == "s1":
+            p = (Primitive.SPDMM
+                 if kernel.kernel_type == KernelType.AGGREGATE
+                 else Primitive.GEMM)
+            c = np.full(ax.shape, int(p), np.int32)
+        elif strategy == "s2":
+            c = np.full(ax.shape, int(Primitive.SPDMM), np.int32)
+        elif strategy == "gemm":
+            c = np.full(ax.shape, int(Primitive.GEMM), np.int32)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        step = np.where(
+            c == Primitive.GEMM,
+            np.asarray(model.cycles(Primitive.GEMM, bm, bk, bn, ax, ay)),
+            np.where(
+                c == Primitive.SPDMM,
+                np.asarray(model.cycles(Primitive.SPDMM, bm, bk, bn, ax, ay)),
+                np.where(
+                    c == Primitive.SPMM,
+                    np.asarray(model.cycles(Primitive.SPMM, bm, bk, bn,
+                                            ax, ay)),
+                    0.0)))
+        codes[i0:i1] = c
+        costs[i0:i1] = step.sum(axis=2)
+    return codes, costs
+
+
+def _k2p_model_seconds(num_decisions: int) -> float:
+    return num_decisions * _K2P_INSTRUCTIONS / _SOFT_PROC_IPS
+
+
+# ---------------------------------------------------------------------------
+# Pure cost-model simulation (paper-table benchmarks; no numerics).
+# ---------------------------------------------------------------------------
+
+def propagate_stats(
+    compiled: CompiledModel,
+    static_stats: Dict[str, SparsityStats],
+    *,
+    relu_keep: float = 0.5,
+) -> Dict[str, SparsityStats]:
+    """Forward pass in DENSITY space over the IR.
+
+    Intermediate feature densities are unknown at compile time (the paper
+    profiles them at runtime); here we predict them per block with the
+    independent-Bernoulli model (perf_model.predict_output_density), which is
+    also what the paper's Analyzer uses to pre-plan layer l+1 during layer l.
+    ReLU keeps ``relu_keep`` of nonzeros (sign symmetry).
+    """
+    env = dict(static_stats)
+    for k in compiled.graph.topo_order():
+        dx, dy = _operand_block_densities(k, env)
+        _, bk, _ = kernel_block_dims(k)
+        # out block (i, j): 1 - prod_k (1 - dx[i,k] dy[k,j])^bk
+        log_stay = np.zeros((dx.shape[0], dy.shape[1]))
+        for kk in range(dx.shape[1]):
+            p = np.clip(np.outer(dx[:, kk], dy[kk, :]), 0.0, 1.0 - 1e-12)
+            log_stay += bk * np.log1p(-p)
+        dens = 1.0 - np.exp(log_stay)
+        if k.kernel_type == KernelType.AGGREGATE:
+            # stats convention: features live at (N2, N2) granularity; the
+            # Aggregate result is uniform within its N1 row panel -> expand.
+            dens = np.repeat(dens, max(k.scheme.n1 // k.scheme.n2, 1), axis=0)
+            m = k.matmul_dims[0]
+            dens = dens[: -(-m // k.scheme.n2)]
+        if k.epilogue_add is not None and k.epilogue_add in env:
+            other = env[k.epilogue_add].block_densities
+            dens = 1.0 - (1.0 - dens) * (1.0 - other)
+        if k.activation_enabled and k.activation == Activation.RELU:
+            dens = dens * relu_keep
+        m, _, d = k.matmul_dims
+        env[k.out] = SparsityStats.from_predicted(
+            (m, d), (k.scheme.n2, k.scheme.n2), dens)
+    return env
+
+
+def _pool_rows(bd: np.ndarray, r: int) -> np.ndarray:
+    """Mean-pool row-blocks r at a time (exact for element densities)."""
+    if r <= 1:
+        return bd
+    rows = bd.shape[0]
+    pad = (-rows) % r
+    if pad:
+        bd = np.concatenate([bd, np.zeros((pad, bd.shape[1]))], axis=0)
+        w = np.concatenate([np.ones((rows, 1)), np.zeros((pad, 1))])
+    else:
+        w = np.ones((bd.shape[0], 1))
+    num = (bd * w).reshape(-1, r, bd.shape[1]).sum(axis=1)
+    den = w.reshape(-1, r, 1).sum(axis=1)
+    return num / np.maximum(den, 1)
+
+
+def _operand_block_densities(k: KernelIR, env: Dict[str, SparsityStats]
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """(I, K) lhs / (K, J) rhs block-density grids at the kernel's dims.
+
+    Feature-matrix stats are stored at (N2, N2); an Aggregate kernel consumes
+    its rhs at (N1, N2) fiber granularity, so row-blocks are mean-pooled.
+    """
+    sx, sy = env[k.lhs], env[k.rhs]
+    dx, dy = sx.block_densities, sy.block_densities
+    if k.kernel_type == KernelType.AGGREGATE:
+        dy = _pool_rows(dy, max(k.scheme.n1 // k.scheme.n2, 1))
+    return dx, dy
+
+
+def simulate_inference(
+    compiled: CompiledModel,
+    stats_env: Dict[str, SparsityStats],
+    *,
+    strategy: str = "dynamic",
+    model: Optional[FPGACostModel] = None,
+    n_cc: Optional[int] = None,
+) -> InferenceReport:
+    """Predicted latency of a full GNN inference under a mapping strategy."""
+    model = model or FPGACostModel()
+    n_cc = n_cc or compiled.partition.n_cc
+    reports = []
+    for k in compiled.graph.topo_order():
+        dx, dy = _operand_block_densities(k, stats_env)
+        codes, costs = _plan_kernel(k, dx, dy, strategy, model)
+        sched = scheduler.schedule_dynamic(costs.reshape(-1), n_cc)
+        hist = np.bincount(codes.reshape(-1), minlength=4).astype(np.int64)
+        reports.append(KernelReport(
+            name=k.name, num_tasks=int(costs.size), histogram=hist,
+            makespan_cycles=sched.makespan, utilization=sched.utilization,
+            k2p_seconds=_k2p_model_seconds(codes.size)))
+    return InferenceReport(reports, strategy)
+
+
+# ---------------------------------------------------------------------------
+# Real-numerics engine (small graphs; validates that dispatch preserves math).
+# ---------------------------------------------------------------------------
+
+_AGG_PRE = {AggOp.SUM: "A", AggOp.MEAN: "A_mean"}
+
+
+class DynasparseEngine:
+    """Executes a compiled GNN with per-partition primitive dispatch."""
+
+    def __init__(self, *, strategy: str = "dynamic",
+                 model: Optional[FPGACostModel] = None,
+                 n_cc: Optional[int] = None,
+                 use_kernels: bool = False,
+                 tile: Tuple[int, int] = (16, 16)):
+        self.strategy = strategy
+        self.model = model or FPGACostModel()
+        self.n_cc = n_cc
+        self.use_kernels = use_kernels
+        self.tile = tile
+
+    def run(self, compiled: CompiledModel, tensors: Dict[str, jnp.ndarray]
+            ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
+        env = dict(tensors)
+        n_cc = self.n_cc or compiled.partition.n_cc
+        reports: List[KernelReport] = []
+        for k in compiled.graph.topo_order():
+            t0 = time.perf_counter()
+            out, rep = self._run_kernel(k, env, n_cc)
+            env[k.out] = out
+            rep.wall_seconds = time.perf_counter() - t0
+            reports.append(rep)
+        return env, InferenceReport(reports, self.strategy)
+
+    # -- one kernel ---------------------------------------------------------
+    def _run_kernel(self, k: KernelIR, env: Dict[str, jnp.ndarray],
+                    n_cc: int) -> Tuple[jnp.ndarray, KernelReport]:
+        bm, bk, bn = kernel_block_dims(k)
+        if k.kernel_type == KernelType.AGGREGATE:
+            lhs_name = _AGG_PRE.get(k.agg_op)
+            if lhs_name is None:
+                raise NotImplementedError(
+                    f"{k.agg_op} aggregation is not matmul-representable")
+            x = env[lhs_name]
+        else:
+            x = env[k.lhs]
+        y = env[k.rhs]
+        # --- profile (the accelerator's Sparsity Profiler) ---
+        t_plan = time.perf_counter()
+        dx = np.asarray(block_density(x, (bm, bk)))
+        dy = np.asarray(block_density(y, (bk, bn)))
+        codes, costs = _plan_kernel(k, dx, dy, self.strategy, self.model)
+        k2p_wall = time.perf_counter() - t_plan
+        sched = scheduler.schedule_dynamic(costs.reshape(-1), n_cc)
+
+        # --- execute tasks (blocked matmul with per-step dispatch) ---
+        out = self._blocked_matmul(x, y, codes, (bm, bk, bn))
+        out = self._epilogue(k, out, env)
+
+        hist = np.bincount(codes.reshape(-1), minlength=4).astype(np.int64)
+        rep = KernelReport(
+            name=k.name, num_tasks=int(costs.size), histogram=hist,
+            makespan_cycles=sched.makespan, utilization=sched.utilization,
+            k2p_seconds=max(_k2p_model_seconds(codes.size), k2p_wall * 0.0))
+        return out, rep
+
+    def _blocked_matmul(self, x, y, codes, block) -> jnp.ndarray:
+        bm, bk, bn = block
+        m, n = x.shape[0], y.shape[1]
+        I, J, K = codes.shape
+        pm, pk_ = (-m) % bm, (-x.shape[1]) % bk
+        pn = (-n) % bn
+        xp = jnp.pad(x, ((0, pm), (0, pk_)))
+        yp = jnp.pad(y, ((0, pk_), (0, pn)))
+        rows = []
+        for i in range(I):
+            cols = []
+            for j in range(J):
+                acc = jnp.zeros((bm, bn), jnp.float32)
+                for t in range(K):
+                    prim = Primitive(int(codes[i, j, t]))
+                    if prim == Primitive.SKIP:
+                        continue
+                    xblk = jax.lax.dynamic_slice(xp, (i * bm, t * bk), (bm, bk))
+                    yblk = jax.lax.dynamic_slice(yp, (t * bk, j * bn), (bk, bn))
+                    if self.use_kernels:
+                        acc = acc + ops.matmul(xblk, yblk, prim,
+                                               tile=self.tile).astype(jnp.float32)
+                    else:
+                        acc = acc + jnp.dot(xblk, yblk,
+                                            preferred_element_type=jnp.float32)
+                cols.append(acc)
+            rows.append(jnp.concatenate(cols, axis=1))
+        out = jnp.concatenate(rows, axis=0)
+        return out[:m, :n].astype(jnp.promote_types(x.dtype, y.dtype))
+
+    def _epilogue(self, k: KernelIR, out, env) -> jnp.ndarray:
+        if k.epilogue_add is not None:
+            out = out * 1.0 + env[k.epilogue_add] * k.epilogue_scale \
+                if k.epilogue_scale != 1.0 else out + env[k.epilogue_add]
+        if k.activation_enabled:
+            if k.activation == Activation.RELU:
+                out = jax.nn.relu(out)
+            elif k.activation == Activation.PRELU:
+                out = jnp.where(out >= 0, out, 0.25 * out)
+        return out

@@ -1,0 +1,1 @@
+"""Data substrates: synthetic graphs (paper benchmarks) + token pipeline."""

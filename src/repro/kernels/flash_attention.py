@@ -1,0 +1,109 @@
+"""FlashAttention forward kernel (online softmax, VMEM-tiled).
+
+Not part of the paper (Dynasparse has no attention); this is the LM-side
+perf-critical hot spot of the framework the technique is embedded in.  The
+kernel computes softmax(q k^T / sqrt(d)) v one (bq x bk) score tile at a
+time, carrying running max/denominator in VMEM scratch so the (S x S) score
+matrix never materializes.  Causal masking skips fully-masked kv blocks the
+same way spdmm skips empty tiles: `pl.when` + clamped index maps.
+
+The distributed dry-run deliberately uses the XLA reference path instead
+(`ref.ref_attention`) so `compiled.cost_analysis()` keeps full FLOP
+visibility -- a Pallas custom call would hide its FLOPs from the roofline.
+This kernel is validated in interpret mode and is the drop-in for real-TPU
+serving (see serving/engine.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, kv_len: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            # queries sit at the END of the kv sequence (prefill alignment)
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+                + (kv_len - pl.num_programs(1) * bq)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip kv blocks strictly in the future of the whole q block
+        q_end = (i + 1) * bq - 1 + (kv_len - pl.num_programs(1) * bq)
+        pl.when(j * bk <= q_end)(_step)
+    else:
+        _step()
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, H, Skv, D) -> (B, H, Sq, D).
+
+    Sq % bq == 0 and Skv % bk == 0 (ops wrapper pads & re-slices); GQA is
+    handled by the wrapper repeating kv heads.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    assert sq % bq == 0 and skv % bk == 0, (q.shape, k.shape, bq, bk)
+    scale = d ** -0.5
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, kv_len=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, sq // bq, skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

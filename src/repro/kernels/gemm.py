@@ -1,0 +1,58 @@
+"""GEMM primitive: dense tiled matmul on the MXU (paper's "GEMM mode").
+
+The FPGA realizes GEMM as a p_sys x p_sys output-stationary systolic array.
+The TPU analogue is the 128x128 MXU; the Pallas kernel tiles HBM operands
+into MXU-aligned VMEM blocks, accumulates in an fp32 VMEM scratch (output-
+stationary, like the paper), and writes each output tile once on the last
+k-step.  Grid order (i, j, k) keeps k innermost so the X/Y block DMAs
+pipeline while the accumulator stays resident.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def gemm(x: jnp.ndarray, y: jnp.ndarray, *,
+         block: Tuple[int, int, int] = (128, 128, 128),
+         interpret: bool = False,
+         out_dtype=None) -> jnp.ndarray:
+    """``x @ y`` for tile-multiple shapes.  ops.matmul handles padding."""
+    (m, kdim), (_, n) = x.shape, y.shape
+    bm, bk, bn = block
+    assert m % bm == 0 and kdim % bk == 0 and n % bn == 0, (x.shape, y.shape, block)
+    out_dtype = out_dtype or jnp.promote_types(x.dtype, y.dtype)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,133 @@
+"""Public jit'd wrappers over the Pallas primitives.
+
+These own everything the raw kernels don't: padding to tile multiples,
+operand-order normalization (the paper's "which buffer does the sparse
+operand go to"), format conversion (dense -> BlockCSR/BlockCSC), interpret-
+mode defaulting (CPU container => interpret=True), and primitive dispatch
+from a `Primitive` code (the Analyzer's K2P output).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+from repro.core.perf_model import Primitive
+from repro.kernels import flash_attention as _flash
+from repro.kernels import gemm as _gemm
+from repro.kernels import profile as _profile
+from repro.kernels import spdmm as _spdmm
+from repro.kernels import spmm as _spmm
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels execute in interpret mode off-TPU (this container)."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:
+    m, n = x.shape
+    pm, pn = (-m) % tile[0], (-n) % tile[1]
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def gemm(x: jnp.ndarray, y: jnp.ndarray, *,
+         tile: Tuple[int, int, int] = (128, 128, 128),
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Dense tiled matmul for arbitrary 2D shapes (pads, runs, slices)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = x.shape[0], y.shape[1]
+    bm, bk, bn = tile
+    xp = _pad2(x, (bm, bk))
+    yp = _pad2(y, (bk, bn))
+    out = _gemm.gemm(xp, yp, block=tile, interpret=interpret)
+    return out[:m, :n]
+
+
+def spdmm(x: jnp.ndarray, y: jnp.ndarray, *,
+          tile: Tuple[int, int] = (128, 128), bn: int = 128,
+          sparse_rhs: bool = False,
+          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Block-sparse x dense.  ``sparse_rhs=True`` treats Y as the sparse
+    operand (paper: sparse operand -> BufferU) via the transposed product
+    Z = (Y^T X^T)^T, keeping a single kernel implementation."""
+    interpret = default_interpret() if interpret is None else interpret
+    if sparse_rhs:
+        return spdmm(y.T, x.T, tile=tile, bn=bn, interpret=interpret).T
+    m, n = x.shape[0], y.shape[1]
+    xb = formats.dense_to_bcsr(_pad2(x, tile), tile)
+    yp = _pad2(y, (tile[1], bn))
+    out = _spdmm.spdmm(xb, yp, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+def spmm(x: jnp.ndarray, y: jnp.ndarray, *,
+         tile: Tuple[int, int] = (128, 128),
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Block-sparse x block-sparse with tile-pair intersection skipping."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = x.shape[0], y.shape[1]
+    xb = formats.dense_to_bcsr(_pad2(x, tile), tile)
+    yb = formats.dense_to_bcsc(_pad2(y, (tile[1], tile[1])), (tile[1], tile[1]))
+    plan = _spmm.plan_intersection(xb, yb)
+    out = _spmm.spmm(xb, yb, plan, interpret=interpret)
+    return out[:m, :n]
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray, primitive: Primitive, *,
+           tile: Tuple[int, int] = (128, 128),
+           sparse_rhs: bool = False,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Dispatch one K2P decision (Algorithm 7 output) to its kernel."""
+    if primitive == Primitive.SKIP:
+        dt = jnp.promote_types(x.dtype, y.dtype)
+        return jnp.zeros((x.shape[0], y.shape[1]), dt)
+    if primitive == Primitive.GEMM:
+        return gemm(x, y, tile=(tile[0], tile[1], tile[1]), interpret=interpret)
+    if primitive == Primitive.SPDMM:
+        return spdmm(x, y, tile=tile, sparse_rhs=sparse_rhs, interpret=interpret)
+    if primitive == Primitive.SPMM:
+        return spmm(x, y, tile=tile, interpret=interpret)
+    raise ValueError(f"unknown primitive {primitive}")
+
+
+def tile_nnz(x: jnp.ndarray, *, tile: Tuple[int, int] = (128, 128),
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused-at-writeback sparsity profiling (per-tile nonzero counts)."""
+    interpret = default_interpret() if interpret is None else interpret
+    mb = -(-x.shape[0] // tile[0])
+    nb = -(-x.shape[1] // tile[1])
+    out = _profile.tile_nnz(_pad2(x, tile), tile=tile, interpret=interpret)
+    return out[:mb, :nb]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False, bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(B, H, Sq, D) x (B, Hkv, Skv, D): pads seq dims, repeats GQA kv heads."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != h:
+        assert h % hkv == 0, (h, hkv)
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    bq, bk = min(bq, max(sq, 1)), min(bk, max(skv, 1))
+    pq, pk = (-sq) % bq, (-skv) % bk
+    if pk and not causal:
+        raise ValueError("non-causal flash requires Skv % bk == 0")
+    if pq or pk:
+        # FRONT-pad both so the causal "queries at the end of the kv
+        # sequence" alignment is preserved for the real rows; padded keys
+        # are then masked by the causal rule for every real query.
+        q = jnp.pad(q, ((0, 0), (0, 0), (pq, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (pk, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (pk, 0), (0, 0)))
+    out = _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out[:, :, pq:, :]

@@ -1,0 +1,42 @@
+"""Sparsity Profiler kernel (paper Section V-B2).
+
+The FPGA puts a comparator array + adder tree at the Result Buffer's output
+port so density is counted during writeback for free.  The Pallas analogue:
+a tiny grid-parallel kernel whose per-tile nonzero count is a (1,1) output
+block -- fusable onto the producing kernel's epilogue on real hardware, and
+cheap enough to be "free" relative to the matmuls it profiles.  The counts
+feed the runtime Analyzer's K2P decisions (Algorithm 7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _profile_kernel(x_ref, o_ref):
+    o_ref[0, 0] = jnp.sum((x_ref[...] != 0).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def tile_nnz(x: jnp.ndarray, *, tile: Tuple[int, int] = (128, 128),
+             interpret: bool = False) -> jnp.ndarray:
+    """Per-tile nonzero counts: (M, N) -> (Mb, Nb) int32.
+
+    Shapes must be tile multiples (ops wrapper pads with zeros, which do not
+    perturb the counts)."""
+    m, n = x.shape
+    tm, tn = tile
+    assert m % tm == 0 and n % tn == 0, (x.shape, tile)
+    mb, nb = m // tm, n // tn
+    return pl.pallas_call(
+        _profile_kernel,
+        grid=(mb, nb),
+        in_specs=[pl.BlockSpec((tm, tn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mb, nb), jnp.int32),
+        interpret=interpret,
+    )(x)

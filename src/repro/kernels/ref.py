@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` computes the mathematically exact result (fp32 accumulation)
+that the corresponding kernel must match under ``interpret=True`` on CPU and
+on real TPU hardware.  Tests sweep shapes/dtypes and assert allclose.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Oracle shared by GEMM / SpDMM / SPMM: they differ only in which zeros
+    they *skip*, never in the value they compute."""
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(jnp.promote_types(x.dtype, y.dtype))
+
+
+def ref_tile_nnz(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:
+    """Per-tile nonzero counts: (M, N) -> (Mb, Nb) int32 (pads with zeros)."""
+    m, n = x.shape
+    tm, tn = tile
+    pm, pn = (-m) % tm, (-n) % tn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    mb, nb = x.shape[0] // tm, x.shape[1] // tn
+    nz = (x != 0).reshape(mb, tm, nb, tn)
+    return jnp.sum(nz, axis=(1, 3)).astype(jnp.int32)
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = False, scale: float | None = None) -> jnp.ndarray:
+    """Softmax attention oracle.  q,k,v: (B, H, S, D) (kv may differ in S)."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        # queries are the LAST sq positions of the kv sequence (prefill align)
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,97 @@
+"""SpDMM primitive: block-sparse x dense matmul (paper's "SpDMM mode").
+
+FPGA version (Alg. 5): COO elements of the sparse operand are scatter-routed
+through butterfly networks to update units -- element-granular zero skipping.
+The MXU cannot skip elements, so the TPU adaptation skips *tiles*: the sparse
+operand is Block-CSR (``core.formats.BlockCSRMatrix``) and the kernel walks,
+for each output tile row, ONLY that row's nonzero tiles.  The nonzero-tile
+column indices arrive via scalar prefetch (pltpu.PrefetchScalarGridSpec), so
+the dense operand's matching tile is DMA'd on demand -- the TPU-native form
+of the paper's "route e to the bank holding Y[i]".
+
+The grid's s-axis is sized by the *capacity* ``Smax`` (max nonzero tiles per
+tile-row).  Steps beyond ``counts[i]`` clamp their index maps to the last
+valid block, so no new DMA is issued (Pallas elides same-index copies), and
+``pl.when`` masks the FLOPs; cost therefore tracks the actual tile density,
+which is exactly the paper's SpDMM cost model at tile granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import BlockCSRMatrix
+
+
+def _spdmm_kernel(cols_ref, counts_ref, clamp_ref, x_ref, y_ref, o_ref,
+                  acc_ref):
+    del cols_ref, clamp_ref  # consumed by the index maps
+    i, s = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < counts_ref[i])
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[0, 0], y_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret", "out_dtype"))
+def spdmm(x: BlockCSRMatrix, y: jnp.ndarray, *, bn: int = 128,
+          interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """``dense(x) @ y`` where ``x`` is Block-CSR.
+
+    ``y`` must be padded to ``(Kb*tk, n)`` with ``n % bn == 0`` (ops.matmul
+    owns padding).  Returns the tile-padded product ``(Mb*tm, n)``; callers
+    slice back to the logical ``x.shape[0]`` rows.
+    """
+    tm, tk = x.tile
+    mb, smax = x.col_idx.shape
+    kb = x.grid[1]
+    n = y.shape[1]
+    assert y.shape[0] == kb * tk and n % bn == 0, (x.shape, y.shape, x.tile)
+    out_dtype = out_dtype or jnp.promote_types(x.blocks.dtype, y.dtype)
+    nb = n // bn
+    # Clamp masked steps to the last valid slot: same index -> no extra DMA.
+    clamp = jnp.maximum(x.counts - 1, 0)  # (Mb,)
+
+    def x_index(i, j, s, cols, counts, clamp_ref):
+        del j, cols, counts
+        return (i, jnp.minimum(s, clamp_ref[i]), 0, 0)
+
+    def y_index(i, j, s, cols, counts, clamp_ref):
+        del counts
+        return (cols[i, jnp.minimum(s, clamp_ref[i])], j)
+
+    blocks, cols = x.blocks, x.col_idx
+    if smax == 0:  # fully-empty sparse operand: keep one dummy slot
+        blocks = jnp.zeros((mb, 1, tm, tk), x.blocks.dtype)
+        cols = jnp.zeros((mb, 1), jnp.int32)
+        smax = 1
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(mb, nb, smax),
+        in_specs=[
+            pl.BlockSpec((1, 1, tm, tk), x_index),
+            pl.BlockSpec((tk, bn), y_index),
+        ],
+        out_specs=pl.BlockSpec((tm, bn), lambda i, j, s, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((tm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spdmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * tm, n), out_dtype),
+        interpret=interpret,
+    )(cols, x.counts, clamp, blocks, y)

@@ -1,0 +1,148 @@
+"""SPMM primitive: block-sparse x block-sparse matmul (paper's "SPMM mode").
+
+FPGA version (Alg. 6): row-wise product with per-element Sparse Computation
+Pipelines and sparse data queues.  Element-granular intersection has no MXU
+analogue, so the TPU adaptation intersects *tile occupancy*: a reduction step
+k contributes to output tile (i, j) only when BOTH X[i,k] and Y[k,j] tiles
+are nonzero.  The intersection schedule -- (k-slot positions into the two
+compact payload arrays) -- is computed by the runtime system (this module's
+``plan_intersection``; the soft-processor role) and fed to the kernel via
+scalar prefetch.  Surviving work = b_X * b_Y under independence: exactly the
+paper's SPMM cost a_X*a_Y at tile granularity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import BlockCSCMatrix, BlockCSRMatrix
+
+
+class IntersectionPlan(NamedTuple):
+    """Scalar-prefetch schedule for one SPMM call (all int32)."""
+
+    xpos: jnp.ndarray     # (Mb, Nb, S): slot of step s in X.blocks[i]
+    ypos: jnp.ndarray     # (Mb, Nb, S): slot of step s in Y.blocks[j]
+    counts: jnp.ndarray   # (Mb, Nb): surviving reduction steps per out tile
+
+    @property
+    def smax(self) -> int:
+        return self.xpos.shape[2]
+
+
+def plan_intersection(x: BlockCSRMatrix, y: BlockCSCMatrix,
+                      smax: int | None = None) -> IntersectionPlan:
+    """Intersect tile-occupancy of X rows with Y columns (vectorized).
+
+    O(Mb*Nb*Kb) bit work on the host/runtime side -- the analogue of the
+    paper's K2P/schedule preparation, overlappable with prior-layer compute.
+    """
+    mb, kb = x.grid
+    kb2, nb = y.grid
+    assert kb == kb2, (x.shape, y.shape)
+    # occupancy masks from the compact index lists
+    slot = jnp.arange(x.col_idx.shape[1])
+    occ_x = jnp.zeros((mb, kb + 1), bool).at[
+        jnp.arange(mb)[:, None],
+        jnp.where(slot[None, :] < x.counts[:, None], x.col_idx, kb),
+    ].set(True)[:, :kb]
+    slot_y = jnp.arange(y.row_idx.shape[1])
+    occ_y = jnp.zeros((nb, kb + 1), bool).at[
+        jnp.arange(nb)[:, None],
+        jnp.where(slot_y[None, :] < y.counts[:, None], y.row_idx, kb),
+    ].set(True)[:, :kb].T                            # (Kb, Nb)
+    inter = occ_x[:, None, :] & occ_y.T[None, :, :]  # (Mb, Nb, Kb)
+    counts = jnp.sum(inter, axis=2).astype(jnp.int32)
+    smax = int(smax if smax is not None else kb)
+    # positions of k within the compact storages
+    xpos_full = jnp.cumsum(occ_x, axis=1) - 1        # (Mb, Kb)
+    ypos_full = (jnp.cumsum(occ_y, axis=0) - 1).T    # (Nb, Kb)
+    # compact the surviving k's of each (i, j) into s-slots
+    dest = jnp.where(inter, jnp.cumsum(inter, axis=2) - 1, smax)
+    dest = jnp.minimum(dest, smax)
+    ii = jnp.broadcast_to(jnp.arange(mb)[:, None, None], inter.shape)
+    jj = jnp.broadcast_to(jnp.arange(nb)[None, :, None], inter.shape)
+    xp = jnp.broadcast_to(xpos_full[:, None, :], inter.shape)
+    yp = jnp.broadcast_to(ypos_full[None, :, :], inter.shape)
+    xpos = jnp.zeros((mb, nb, smax + 1), jnp.int32).at[ii, jj, dest].set(
+        xp.astype(jnp.int32))[..., :smax]
+    ypos = jnp.zeros((mb, nb, smax + 1), jnp.int32).at[ii, jj, dest].set(
+        yp.astype(jnp.int32))[..., :smax]
+    return IntersectionPlan(xpos, ypos, jnp.minimum(counts, smax))
+
+
+def _spmm_kernel(xpos_ref, ypos_ref, counts_ref, x_ref, y_ref, o_ref,
+                 acc_ref):
+    del xpos_ref, ypos_ref  # consumed by the index maps
+    i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < counts_ref[i, j])
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[0, 0], y_ref[0, 0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def spmm(x: BlockCSRMatrix, y: BlockCSCMatrix, plan: IntersectionPlan, *,
+         interpret: bool = False, out_dtype=None) -> jnp.ndarray:
+    """``dense(x) @ dense(y)`` skipping every tile-pair with an empty side.
+
+    Returns the tile-padded product ``(Mb*tm, Nb*tn)``.
+    """
+    tm, tk = x.tile
+    tk2, tn = y.tile
+    assert tk == tk2, (x.tile, y.tile)
+    mb = x.grid[0]
+    nb = y.grid[1]
+    out_dtype = out_dtype or jnp.promote_types(x.blocks.dtype, y.blocks.dtype)
+    smax = plan.smax
+    xblocks, yblocks = x.blocks, y.blocks
+    if xblocks.shape[1] == 0:
+        xblocks = jnp.zeros((mb, 1, tm, tk), xblocks.dtype)
+    if yblocks.shape[1] == 0:
+        yblocks = jnp.zeros((nb, 1, tk, tn), yblocks.dtype)
+    if smax == 0:
+        plan = IntersectionPlan(
+            jnp.zeros((mb, nb, 1), jnp.int32),
+            jnp.zeros((mb, nb, 1), jnp.int32), plan.counts)
+        smax = 1
+    clampx = jnp.minimum(plan.xpos, xblocks.shape[1] - 1)
+    clampy = jnp.minimum(plan.ypos, yblocks.shape[1] - 1)
+
+    def x_index(i, j, s, xpos, ypos, counts):
+        del ypos, counts
+        return (i, xpos[i, j, s], 0, 0)
+
+    def y_index(i, j, s, xpos, ypos, counts):
+        del xpos, counts
+        return (j, ypos[i, j, s], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(mb, nb, smax),
+        in_specs=[
+            pl.BlockSpec((1, 1, tm, tk), x_index),
+            pl.BlockSpec((1, 1, tk, tn), y_index),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * tm, nb * tn), out_dtype),
+        interpret=interpret,
+    )(clampx, clampy, plan.counts, xblocks, yblocks)

@@ -1,0 +1,379 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  For each cell this driver produces:
+
+1. MEMORY pass -- the real program (scan-over-layers, remat, chunked
+   attention, microbatching): ``compiled.memory_analysis()`` proves the
+   cell fits 16 GiB/chip HBM.
+2. COST passes -- two SHALLOW UNROLLED proxies (1x and 2x the layer
+   period): XLA's cost_analysis counts a while-loop body once, so
+   FLOP/byte/collective-accurate numbers need unrolled HLO.  Per-device
+   cost is linear in depth, cost(L) = a + b*n_periods, so two proxies
+   solve (a, b) exactly and extrapolate to full depth.  Chunk-scans inside
+   mixers are disabled in proxies (chunk = seq) for the same reason; the
+   sLSTM time-scan recurrence is the one documented exception (<0.2% of
+   FLOPs, see EXPERIMENTS.md).
+3. Collective bytes -- parsed from the proxies' partitioned HLO
+   (`compiled.as_text()`): operand bytes of all-gather / all-reduce /
+   reduce-scatter / all-to-all / collective-permute, extrapolated like
+   FLOPs.
+4. Roofline terms (EXPERIMENTS.md section Roofline): compute/memory/
+   collective seconds against TPU v5e constants, dominant term, MODEL_FLOPS
+   ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun
+  python -m repro.launch.dryrun --all --mesh multi_pod   # 2x16x16
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import hw
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.configs.registry import cell_supported
+from repro.distributed import sharding, shardctx
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo
+from repro.train.optimizer import AdamW
+from repro.train.trainer import TrainState, make_train_step
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device OPERAND bytes per collective kind (documented convention:
+    AG operand = result/shards, RS operand = result*shards, others =
+    result)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:
+            continue  # count async pairs once (at -start)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        g = _GROUP_RE.search(line)
+        shards = int(g.group(2)) if g else 1
+        if kind == "all-gather":
+            nbytes = nbytes / max(shards, 1)
+        elif kind == "reduce-scatter":
+            nbytes = nbytes * max(shards, 1)
+        out[kind] += nbytes
+    return out
+
+
+# --------------------------------------------------------------------------
+# Cell construction
+# --------------------------------------------------------------------------
+
+def _variant(cfg: ModelConfig, shape: ShapeCfg, *, mode: str,
+             n_periods: Optional[int] = None) -> ModelConfig:
+    """mode: 'memory' (real program) or 'cost' (unrolled shallow proxy)."""
+    kw: Dict[str, Any] = {}
+    if mode == "memory":
+        kw.update(scan_layers=True, attn_impl="chunked", logit_chunk=8)
+    else:
+        period = cfg.layer_period
+        kw.update(scan_layers=False, attn_impl="einsum", logit_chunk=1,
+                  n_layers=period * n_periods + cfg.dense_first_n)
+        if cfg.mamba is not None:
+            kw["mamba"] = dataclasses.replace(cfg.mamba, chunk=shape.seq_len)
+        if cfg.xlstm is not None:
+            kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk=shape.seq_len)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _microbatches(cfg: ModelConfig, shape: ShapeCfg) -> int:
+    """Keep live activations per microbatch bounded for the giants."""
+    if shape.kind != "train":
+        return 1
+    total = cfg.total_params()
+    if total > 2e11:
+        return 16
+    if total > 2e10:
+        return 8
+    return 4 if total > 5e9 else 1
+
+
+def _logits_sharding(mesh, cfg: ModelConfig, batch: int):
+    spec = sharding.batch_spec(mesh, (batch, cfg.padded_vocab), batch)
+    model_n = mesh.shape.get("model", 1)
+    ba = spec[0] if len(spec) else None
+    vspec = "model" if cfg.padded_vocab % max(model_n, 1) == 0 else None
+    return sharding.NamedSharding(mesh, sharding.P(ba, vspec))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCfg, mesh, *,
+               num_microbatches: int = 1):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate).
+
+    Output shardings are pinned explicitly: without them XLA left the
+    gradient/optimizer outputs partially replicated (38 GiB/chip on grok-1
+    -- caught by the memory pass of the first sweep)."""
+    bundle = model_zoo.build(cfg)
+    params_abs = model_zoo.abstract_params(cfg)
+    pshard = sharding.param_shardings(mesh, params_abs,
+                                      ep_experts=cfg.moe_ep)
+    inputs = model_zoo.input_specs(cfg, shape)
+    rep = sharding.replicated(mesh)
+
+    if shape.kind == "train":
+        opt = AdamW(state_dtype=cfg.opt_state_dtype)
+        state_abs = TrainState(
+            params_abs, jax.eval_shape(opt.init, params_abs))
+        sshard = TrainState(
+            pshard, state_abs.opt._replace(
+                step=rep,
+                m=sharding.param_shardings(mesh, state_abs.opt.m),
+                v=sharding.param_shardings(mesh, state_abs.opt.v)))
+        step = make_train_step(bundle.loss_fn, opt,
+                               num_microbatches=num_microbatches)
+        bshard = sharding.batch_shardings(mesh, inputs, shape.global_batch)
+        metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep, "step": rep}
+        return (step, (state_abs, inputs), (sshard, bshard),
+                (sshard, metrics_sh), (0,))
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return bundle.prefill(params, batch, max_seq=shape.seq_len)
+        bshard = sharding.batch_shardings(mesh, inputs, shape.global_batch)
+        caches_abs = jax.eval_shape(fn, params_abs, inputs)[1]
+        cshard = sharding.cache_shardings(mesh, caches_abs,
+                                          shape.global_batch)
+        lsh = _logits_sharding(mesh, cfg, shape.global_batch)
+        return (fn, (params_abs, inputs), (pshard, bshard),
+                (lsh, cshard), ())
+
+    # decode: one new token against a seq_len cache
+    caches_abs = model_zoo.abstract_caches(cfg, shape)
+    cshard = sharding.cache_shardings(mesh, caches_abs, shape.global_batch)
+
+    def fn(params, caches, tokens, pos):
+        return bundle.decode_step(params, caches, tokens, pos)
+
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tshard = sharding.batch_shardings(mesh, tok, shape.global_batch)
+    lsh = _logits_sharding(mesh, cfg, shape.global_batch)
+    return (fn, (params_abs, caches_abs, tok, pos),
+            (pshard, cshard, tshard, rep), (lsh, cshard), (1,))
+
+
+def compile_cell(cfg, shape, mesh, *, num_microbatches=1):
+    fn, args, in_sh, out_sh, donate = build_cell(
+        cfg, shape, mesh, num_microbatches=num_microbatches)
+    with shardctx.use_mesh(mesh):
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    return compiled, t1 - t0, t2 - t1
+
+
+# --------------------------------------------------------------------------
+# Roofline
+# --------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg) -> float:
+    n = cfg.active_params()
+    if shape.kind == "train":
+        tok = shape.tokens
+        return 6.0 * n * tok
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline(record: Dict, chips: int) -> Dict:
+    spec = hw.TPU_V5E
+    f = record["flops_per_device"]
+    b = record["bytes_per_device"]
+    c = record["collective_bytes_per_device"]
+    t_comp = f / spec.peak_bf16_flops
+    t_mem = b / spec.hbm_bandwidth
+    t_coll = c / spec.ici_link_bandwidth
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    mf = record["model_flops"]
+    hlo_global = f * chips
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "bound_s": bound,
+        "roofline_fraction_vs_compute": t_comp / bound if bound else 0.0,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "achievable_model_tflops_per_chip":
+            mf / bound / chips / 1e12 if bound else 0.0,
+    }
+
+
+# --------------------------------------------------------------------------
+# One cell end-to-end
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             skip_memory_pass: bool = False,
+             config_override=None) -> Dict:
+    cfg = config_override or get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+    }
+    if not cell_supported(arch, shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention arch: long_500k requires "
+                         "sub-quadratic decode (DESIGN.md section 5)")
+        return rec
+
+    nmb = _microbatches(cfg, shape)
+    # ---- memory pass: the real scanned program ----
+    if not skip_memory_pass:
+        mem_cfg = _variant(cfg, shape, mode="memory")
+        compiled, t_low, t_comp = compile_cell(mem_cfg, shape, mesh,
+                                               num_microbatches=nmb)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gib": ma.argument_size_in_bytes / 2**30,
+            "output_gib": ma.output_size_in_bytes / 2**30,
+            "temp_gib": ma.temp_size_in_bytes / 2**30,
+            "peak_gib": (ma.argument_size_in_bytes
+                         + ma.temp_size_in_bytes) / 2**30,
+            "alias_gib": getattr(ma, "alias_size_in_bytes", 0) / 2**30,
+            "fits_16gib": (ma.argument_size_in_bytes
+                           + ma.temp_size_in_bytes) < 16 * 2**30,
+            "lower_s": round(t_low, 1), "compile_s": round(t_comp, 1),
+            "microbatches": nmb,
+        }
+        del compiled
+
+    # ---- cost proxies: unrolled at 1 and 2 periods ----
+    costs = {}
+    for np_ in (1, 2):
+        pcfg = _variant(cfg, shape, mode="cost", n_periods=np_)
+        compiled, t_low, t_comp = compile_cell(pcfg, shape, mesh,
+                                               num_microbatches=1)
+        ca = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        costs[np_] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll,
+            "compile_s": round(t_comp, 1),
+        }
+        del compiled
+    full_n = cfg.n_periods
+    lin = lambda a, b: a + (b - a) * (full_n - 1)  # noqa: E731
+    flops = lin(costs[1]["flops"], costs[2]["flops"])
+    nbytes = lin(costs[1]["bytes"], costs[2]["bytes"])
+    coll_total = 0.0
+    coll_by_kind = {}
+    for kind in costs[1]["coll"]:
+        v = lin(costs[1]["coll"][kind], costs[2]["coll"][kind])
+        coll_by_kind[kind] = v
+        coll_total += v
+    rec.update({
+        "status": "ok",
+        "flops_per_device": flops,
+        "bytes_per_device": nbytes,
+        "collective_bytes_per_device": coll_total,
+        "collective_by_kind": coll_by_kind,
+        "proxy_compile_s": [costs[1]["compile_s"], costs[2]["compile_s"]],
+        "model_flops": model_flops(cfg, shape),
+    })
+    rec["roofline"] = roofline(rec, chips)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi_pod", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-memory-pass", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="directory for one json per cell (resumable)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi_pod": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                cells.append((arch, shp, mp))
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+    for arch, shp, mp in cells:
+        tag = f"{arch}__{shp}__{'mp' if mp else 'sp'}"
+        path = os.path.join(args.out, tag + ".json") if args.out else None
+        if path and os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shp, multi_pod=mp,
+                           skip_memory_pass=args.skip_memory_pass)
+        except Exception as e:  # noqa: BLE001 -- record failures, keep going
+            rec = {"arch": arch, "shape": shp,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-2000:]}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        line = json.dumps(rec)
+        if path:
+            with open(path, "w") as f:
+                f.write(line)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dom={r['dominant']} comp={r['compute_s']:.4f}s "
+                     f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s"
+                     f" useful={r['useful_ratio']:.2f}")
+            if "memory" in rec:
+                extra += (f" peak={rec['memory']['peak_gib']:.1f}GiB"
+                          f" fits={rec['memory']['fits_16gib']}")
+        print(f"[{status}] {tag} ({rec['wall_s']}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model definitions: the paper's GNNs + the assigned LM architecture zoo."""

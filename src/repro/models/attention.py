@@ -1,0 +1,307 @@
+"""Attention mixers: GQA (llama/grok/whisper/chatglm/chameleon/jamba) and
+MLA (DeepSeek-V2), with three implementations:
+
+* ``einsum``  -- full (Sq x Skv) scores.  Exact FLOP visibility; used by the
+  dry-run COST proxies (cost_analysis must see every MAC).
+* ``chunked`` -- lax.scan over query chunks with masked full-length scores
+  per chunk.  Memory-sane for 32k prefill; used by the memory-analysis
+  compile and the runnable train path on CPU.
+* ``flash``   -- the Pallas kernel (kernels/flash_attention.py); the real-
+  TPU serving path.
+
+KV caches are plain dicts of arrays; decode updates them at ``pos`` via
+dynamic_update_slice.  GQA with n_kv < TP degree relies on GSPMD replication
+(standard Megatron GQA rule); MLA caches the 576-wide latent instead of
+per-head K/V (the paper... the DeepSeek paper's whole point -- 64x smaller
+cache than MHA at 32k).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.shardctx import shard
+from repro.kernels import ops as kops
+from repro.models.layers import apply_rope, rmsnorm, rope_tables
+
+NEG = -1e30
+
+
+def _rope_fraction(cfg: ModelConfig) -> float:
+    return {"full": 1.0, "half": 0.5, "none": 0.0}[cfg.rope]
+
+
+# --------------------------------------------------------------------------
+# score/attend implementations
+# --------------------------------------------------------------------------
+
+def _attend_einsum(q, k, v, *, causal: bool, kv_len: Optional[jnp.ndarray],
+                   scale: float, q_offset) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, G, hd) with H = G * rep.
+    v's head width may differ (MLA latent attention).
+
+    GQA kv heads are repeated to full H and everything is explicitly
+    head-sharded over the TP axis (Megatron GQA rule: a repeated kv head is
+    stored once per its query-head group's shard).  Without the constraint,
+    GSPMD replicated the (B, H, Sq, Skv) score tensor -- the 27 GiB/chip
+    bug the first dry-run sweep caught.
+    """
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    skv = k.shape[1]
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        mask = kpos[None, :] <= qpos
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+
+    from repro.distributed.shardctx import axis_size
+    head_shardable = sq > 1 and h % max(axis_size("model"), 1) == 0
+    if head_shardable:
+        # train/prefill: repeat GQA kv to full heads and shard heads over
+        # TP (Megatron GQA rule) -- keeps the (B,H,Sq,Skv) scores sharded.
+        if g != h:
+            k = jnp.repeat(k, h // g, axis=2)
+            v = jnp.repeat(v, h // g, axis=2)
+        q = shard(q, "batch", None, "model", None)
+        k = shard(k, "batch", None, "model", None)
+        v = shard(v, "batch", None, "model", None)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        s = jnp.where(mask[None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhv->bqhv", p, v)
+        return o.reshape(b, sq, h, v.shape[-1])
+    # decode (and odd head counts): grouped form, no GQA repeat.  The cache
+    # is head_dim-sharded over the model axis (see sharding.cache_spec), so
+    # pin q/k/v to that layout: the score contraction psums over TP (tiny
+    # at decode) and the scores stay unsharded-but-small.  Without the pin,
+    # GSPMD fell back to "involuntary full rematerialization" copies of the
+    # whole cache per step.
+    qg = q.reshape(b, sq, g, h // g, hd)
+    qg = shard(qg, "batch", None, None, None, "model")
+    k = shard(k, "batch", None, None, "model")
+    v = shard(v, "batch", None, None, "model")
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bgrqk,bkgv->bqgrv", p, v)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _attend_chunked(q, k, v, *, causal: bool, kv_len, scale: float,
+                    chunk: int, q_offset) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    chunk = max(1, min(chunk, sq))
+    while sq % chunk:
+        chunk -= 1
+    n = sq // chunk
+    qs = q.reshape(b, n, chunk, h, hd).swapaxes(0, 1)   # (n, b, c, h, hd)
+    offs = jnp.arange(n) * chunk
+
+    def step(_, qo):
+        qc, off = qo
+        o = _attend_einsum(qc, k, v, causal=causal, kv_len=kv_len,
+                           scale=scale, q_offset=q_offset + off)
+        return None, o
+
+    _, outs = jax.lax.scan(step, None, (qs, offs))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, v.shape[-1])
+
+
+def attend(q, k, v, cfg: ModelConfig, *, causal: bool = True,
+           kv_len=None, scale: Optional[float] = None,
+           q_offset=None) -> jnp.ndarray:
+    """q_offset: position of q[0] in the kv sequence (default: end-aligned
+    for no-cache, i.e. skv - sq)."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if q_offset is None:
+        q_offset = k.shape[1] - q.shape[1]
+    if cfg.attn_impl == "einsum" or q.shape[1] == 1:
+        return _attend_einsum(q, k, v, causal=causal, kv_len=kv_len,
+                              scale=scale, q_offset=q_offset)
+    if cfg.attn_impl == "chunked":
+        return _attend_chunked(q, k, v, causal=causal, kv_len=kv_len,
+                               scale=scale, chunk=cfg.attn_chunk,
+                               q_offset=q_offset)
+    if cfg.attn_impl == "flash":
+        assert kv_len is None, "flash path is for train/prefill"
+        qt = q.swapaxes(1, 2)
+        o = kops.flash_attention(qt, k.swapaxes(1, 2), v.swapaxes(1, 2),
+                                 causal=causal)
+        return o.swapaxes(1, 2)
+    raise ValueError(cfg.attn_impl)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def init_gqa(rng, cfg: ModelConfig, dtype, *, cross: bool = False) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, cfg.n_heads * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, cfg.n_kv_heads * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, cfg.n_kv_heads * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (cfg.n_heads * hd, d),
+                                dtype) * (cfg.n_heads * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.zeros((hd,), jnp.float32)
+        p["knorm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def gqa_kv(x: jnp.ndarray, p: Dict, cfg: ModelConfig, positions
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project K/V (used for both self and cross attention)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["knorm"], cfg.norm_eps)
+    if positions is not None and cfg.rope != "none":
+        sin, cos = rope_tables(positions, int(hd * _rope_fraction(cfg)),
+                               cfg.rope_theta)
+        k = apply_rope(k, sin, cos, _rope_fraction(cfg))
+    return k, v
+
+
+def gqa_attention(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+                  positions: jnp.ndarray,
+                  cache: Optional[Dict] = None,
+                  pos: Optional[jnp.ndarray] = None,
+                  causal: bool = True,
+                  kv: Optional[Tuple] = None,
+                  kv_len=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Self attention (kv=None) or cross attention (kv precomputed).
+
+    cache: {"k": (B, Smax, G, hd), "v": ...}; pos: scalar write offset.
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"], cfg.norm_eps)
+    if cfg.rope != "none" and positions is not None:
+        sin, cos = rope_tables(positions, int(hd * _rope_fraction(cfg)),
+                               cfg.rope_theta)
+        q = apply_rope(q, sin, cos, _rope_fraction(cfg))
+    q_offset = None
+    if kv is None:
+        k, v = gqa_kv(x, p, cfg, positions)
+        if cache is not None:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            cache = {"k": k, "v": v}
+            kv_len = pos + s
+            q_offset = pos
+    else:
+        k, v = kv
+    o = attend(q, k.astype(q.dtype), v.astype(q.dtype), cfg, causal=causal,
+               kv_len=kv_len, q_offset=q_offset)
+    return o.reshape(b, s, cfg.n_heads * hd) @ p["wo"], cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV
+# --------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    qdim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * qdim), dtype) * s,
+        "wdkv": jax.random.normal(ks[1], (d, m.kv_lora_rank), dtype) * s,
+        "wkrope": jax.random.normal(ks[2], (d, m.qk_rope_dim), dtype) * s,
+        "wuk": jax.random.normal(ks[3], (m.kv_lora_rank, h * m.qk_nope_dim),
+                                 dtype) * m.kv_lora_rank ** -0.5,
+        "wuv": jax.random.normal(ks[4], (m.kv_lora_rank, h * m.v_head_dim),
+                                 dtype) * m.kv_lora_rank ** -0.5,
+        "wo": jax.random.normal(ks[5], (h * m.v_head_dim, d),
+                                dtype) * (h * m.v_head_dim) ** -0.5,
+    }
+
+
+def mla_attention(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+                  positions: jnp.ndarray,
+                  cache: Optional[Dict] = None,
+                  pos: Optional[jnp.ndarray] = None,
+                  absorbed: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """cache: {"ckv": (B, Smax, rank), "krope": (B, Smax, rope_dim)}.
+
+    Baseline decode up-projects the whole cached latent every step (compute-
+    heavy, memory-light).  ``absorbed=True`` folds W_uk into the query and
+    W_uv into the output projection so decode attends directly in the
+    512-d latent space -- the DeepSeek "matrix absorption" trick; exposed as
+    a perf knob and exercised by the serve hillclimb.
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q = (x @ p["wq"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    qn, qr = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    sin, cos = rope_tables(positions, m.qk_rope_dim, cfg.rope_theta)
+    qr = apply_rope(qr, sin, cos)
+    ckv = x @ p["wdkv"]                                  # (B, S, rank)
+    kr = (x @ p["wkrope"])[:, :, None, :]                # (B, S, 1, rope)
+    kr = apply_rope(kr, sin, cos)[:, :, 0, :]
+    kv_len = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+        kr = jax.lax.dynamic_update_slice(
+            cache["krope"], kr.astype(cache["krope"].dtype), (0, pos, 0))
+        cache = {"ckv": ckv, "krope": kr}
+        kv_len = pos + s
+    skv = ckv.shape[1]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    ckv_c = ckv.astype(x.dtype)
+    kr_c = kr.astype(x.dtype)
+    if absorbed:
+        # fold W_uk into q and W_uv into the output: attend in the shared
+        # 512-d latent -> one "kv head" of width rank+rope, rep = n_heads.
+        wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", qn, wuk)
+        if s == 1:
+            # decode: split-score form -- concat(ckv, kr) would copy the
+            # whole 32k latent cache every step (4.8 GB global; Perf
+            # iteration 2).  Scores read the cache in place.
+            sc = (jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_c)
+                  + jnp.einsum("bqhn,bkn->bhqk", qr, kr_c)) * scale
+            sc = sc.astype(jnp.float32)
+            kmask = jnp.arange(skv)[None, None, None, :] < kv_len
+            sc = jnp.where(kmask, sc, NEG)
+            pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+            o_lat = jnp.einsum("bhqk,bkr->bqhr", pr, ckv_c)
+        else:
+            qt = jnp.concatenate([q_lat, qr], axis=-1)   # (b,s,h,rank+rope)
+            kt = jnp.concatenate([ckv_c, kr_c], axis=-1)[:, :, None, :]
+            vt = ckv_c[:, :, None, :]                    # (b,skv,1,rank)
+            o_lat = attend(qt, kt, vt, cfg, causal=True, kv_len=kv_len,
+                           scale=scale,
+                           q_offset=pos if cache is not None else None)
+        wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        o = jnp.einsum("bqhr,rhv->bqhv", o_lat, wuv)
+    else:
+        kn = (ckv_c @ p["wuk"]).reshape(b, skv, h, m.qk_nope_dim)
+        kt = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr_c[:, :, None, :],
+                                  (b, skv, h, m.qk_rope_dim))], axis=-1)
+        qt = jnp.concatenate([qn, qr], axis=-1)
+        v = (ckv_c @ p["wuv"]).reshape(b, skv, h, m.v_head_dim)
+        o = attend(qt, kt, v, cfg, causal=True, kv_len=kv_len, scale=scale,
+                   q_offset=pos if cache is not None else None)
+    return o.reshape(b, s, h * m.v_head_dim) @ p["wo"], cache

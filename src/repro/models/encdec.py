@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, D) -- what whisper's two conv layers
+would emit -- so the transformer backbone is what's exercised.  Sinusoidal
+positions (whisper uses them for the encoder; we use them on both sides in
+lieu of the learned decoder table), LayerNorm, GELU MLPs, bidirectional
+encoder attention, causal decoder self-attention + cross-attention.
+
+Shape conventions for the assigned cells (documented in DESIGN.md):
+  train_4k    enc_len = seq, dec_len = seq // dec_ratio
+  prefill_32k enc_len = seq, dec_len = seq // dec_ratio
+  decode_*    decoder self-cache of seq_len, cross-attention over
+              enc_len = 3000 frames (whisper's 30 s window)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.shardctx import shard
+from repro.models.attention import gqa_attention, gqa_kv, init_gqa
+from repro.models.layers import chunked_cross_entropy, init_mlp, mlp, norm
+from repro.models.transformer import _init_norm
+
+ENC_DECODE_LEN = 3000
+
+
+def sinusoid(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_block(rng, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(rng)
+    return {"ln1": _init_norm(cfg), "mix": init_gqa(k1, cfg, dtype),
+            "ln2": _init_norm(cfg), "ffn": init_mlp(k2, cfg, cfg.d_ff, dtype)}
+
+
+def _init_dec_block(rng, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"ln1": _init_norm(cfg), "mix": init_gqa(k1, cfg, dtype),
+            "lnx": _init_norm(cfg), "cross": init_gqa(k2, cfg, dtype),
+            "ln2": _init_norm(cfg), "ffn": init_mlp(k3, cfg, cfg.d_ff, dtype)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict:
+    dtype = cfg.jdtype
+    ks = jax.random.split(rng, 4)
+    ed = cfg.encdec
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "enc_final": _init_norm(cfg),
+        "dec_final": _init_norm(cfg),
+    }
+    if cfg.scan_layers:
+        enc = [_init_enc_block(jax.random.fold_in(ks[1], i), cfg, dtype)
+               for i in range(ed.n_enc_layers)]
+        dec = [_init_dec_block(jax.random.fold_in(ks[2], i), cfg, dtype)
+               for i in range(cfg.n_layers)]
+        params["enc_stack"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["dec_stack"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dec)
+    else:
+        params["enc_layers"] = [
+            _init_enc_block(jax.random.fold_in(ks[1], i), cfg, dtype)
+            for i in range(ed.n_enc_layers)]
+        params["dec_layers"] = [
+            _init_dec_block(jax.random.fold_in(ks[2], i), cfg, dtype)
+            for i in range(cfg.n_layers)]
+    return params
+
+
+def _enc_block(x, p, cfg: ModelConfig):
+    h = shard(norm(x, p["ln1"], cfg.norm_eps), "batch", None, None)
+    o, _ = gqa_attention(h, p["mix"], cfg, positions=None, causal=False)
+    x = x + o
+    x = shard(x, "batch", "seq", None)
+    h2 = shard(norm(x, p["ln2"], cfg.norm_eps), "batch", None, None)
+    x = x + mlp(h2, p["ffn"], cfg)
+    return shard(x, "batch", "seq", None)
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    b, s, d = frames.shape
+    x = frames + sinusoid(jnp.arange(s), d)[None].astype(frames.dtype)
+    x = shard(x, "batch", "seq", None)
+    fn = _enc_block
+    if cfg.remat:
+        fn = jax.checkpoint(functools.partial(_enc_block, cfg=cfg))
+    else:
+        fn = functools.partial(_enc_block, cfg=cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, p: (fn(c, p), None), x,
+                            params["enc_stack"])
+    else:
+        for p in params["enc_layers"]:
+            x = fn(x, p)
+    return norm(x, params["enc_final"], cfg.norm_eps)
+
+
+def _dec_block(x, p, cfg: ModelConfig, *, positions, cache, pos, cross_kv):
+    """cross_kv: (k, v) from encoder states (per layer)."""
+    aux = jnp.float32(0.0)
+    h = shard(norm(x, p["ln1"], cfg.norm_eps), "batch", None, None)
+    self_cache = {k: v for k, v in cache.items()
+                  if k in ("k", "v")} if cache else None
+    o, nc = gqa_attention(h, p["mix"], cfg, positions=positions,
+                          cache=self_cache, pos=pos, causal=True)
+    x = x + o
+    x = shard(x, "batch", "seq", None)
+    hx = shard(norm(x, p["lnx"], cfg.norm_eps), "batch", None, None)
+    o, _ = gqa_attention(hx, p["cross"], cfg, positions=None, causal=False,
+                         kv=cross_kv)
+    x = x + o
+    x = shard(x, "batch", "seq", None)
+    h2 = shard(norm(x, p["ln2"], cfg.norm_eps), "batch", None, None)
+    x = x + mlp(h2, p["ffn"], cfg)
+    x = shard(x, "batch", "seq", None)
+    new_cache = {}
+    if cache:
+        new_cache = dict(nc or {})
+        new_cache["xk"] = cache["xk"]
+        new_cache["xv"] = cache["xv"]
+    return x, new_cache, aux
+
+
+def decoder_forward(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                    enc_out: Optional[jnp.ndarray] = None, *,
+                    caches: Optional[Dict] = None, pos=0
+                    ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Cross K/V come from enc_out (training) or from the cache (serving)."""
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens] + sinusoid(
+        pos + jnp.arange(s), d)[None].astype(cfg.jdtype)
+    x = shard(x, "batch", "seq", None)
+    positions = pos + jnp.arange(s)
+
+    def block(x, p, cache):
+        if enc_out is not None:
+            ck, cv = gqa_kv(enc_out, p["cross"], cfg, None)
+        else:
+            ck, cv = cache["xk"], cache["xv"]
+        fn = _dec_block
+        if cfg.remat:
+            fn = jax.checkpoint(functools.partial(
+                _dec_block, cfg=cfg, positions=positions, pos=pos,
+                cross_kv=(ck, cv)))
+            return fn(x, p, cache=cache)
+        return _dec_block(x, p, cfg, positions=positions, cache=cache,
+                          pos=pos, cross_kv=(ck, cv))
+
+    if cfg.scan_layers:
+        stack_caches = (caches or {}).get("dec", {})
+
+        def body(carry, xs):
+            x = carry
+            p, c = xs
+            x, nc, _ = block(x, p, c)
+            return x, nc
+
+        x, ncs = jax.lax.scan(body, x, (params["dec_stack"], stack_caches))
+        new_caches = {"dec": ncs} if caches is not None else None
+    else:
+        layer_caches = (caches or {}).get(
+            "dec", [{}] * cfg.n_layers)
+        ncs = []
+        for p, c in zip(params["dec_layers"], layer_caches):
+            x, nc, _ = block(x, p, c)
+            ncs.append(nc)
+        new_caches = {"dec": ncs} if caches is not None else None
+    x = norm(x, params["dec_final"], cfg.norm_eps)
+    return x, new_caches
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    enc_out = encode(cfg, params, batch["frames"])
+    x, _ = decoder_forward(cfg, params, batch["tokens"], enc_out)
+    return chunked_cross_entropy(x, params["embed"], batch["labels"],
+                                 vocab_size=cfg.vocab_size,
+                                 n_chunks=cfg.logit_chunk)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                enc_len: int) -> Dict:
+    dtype = cfg.jdtype
+    hd = cfg.head_dim_
+    L = cfg.n_layers
+
+    def one():
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "xk": jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+            "xv": jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        }
+
+    if cfg.scan_layers:
+        return {"dec": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[one() for _ in range(L)])}
+    return {"dec": [one() for _ in range(L)]}
+
+
+def prefill(cfg: ModelConfig, params: Dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray, max_seq: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Encode audio, fill cross K/V + decoder self cache."""
+    b, s = tokens.shape
+    enc_out = encode(cfg, params, frames)
+    caches = init_caches(cfg, b, max_seq or s, frames.shape[1])
+    # fill cross kv per layer
+    if cfg.scan_layers:
+        def fill(p):
+            ck, cv = gqa_kv(enc_out, p["cross"], cfg, None)
+            return ck, cv
+        cks, cvs = jax.vmap(
+            lambda p: fill(p), in_axes=(0,))(params["dec_stack"])
+        caches["dec"]["xk"] = cks.astype(cfg.jdtype)
+        caches["dec"]["xv"] = cvs.astype(cfg.jdtype)
+    else:
+        for i, p in enumerate(params["dec_layers"]):
+            ck, cv = gqa_kv(enc_out, p["cross"], cfg, None)
+            caches["dec"][i]["xk"] = ck.astype(cfg.jdtype)
+            caches["dec"][i]["xv"] = cv.astype(cfg.jdtype)
+    x, caches = decoder_forward(cfg, params, tokens, None, caches=caches,
+                                pos=0)
+    logits = x[:, -1] @ params["embed"].T
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: Dict, caches: Dict,
+                tokens: jnp.ndarray, pos) -> Tuple[jnp.ndarray, Dict]:
+    x, caches = decoder_forward(cfg, params, tokens, None, caches=caches,
+                                pos=pos)
+    logits = x[:, -1] @ params["embed"].T
+    return logits, caches

@@ -1,0 +1,131 @@
+"""GNN models (GCN / GraphSAGE / GIN / SGC) through the Dynasparse stack.
+
+The model IS its IR: ``core.compiler`` turns a ``GNNModelSpec`` + graph meta
+into Aggregate/Update kernels, and either the real-numerics engine
+(``core.runtime.DynasparseEngine``) or the cost-model simulator executes it.
+This module provides the bundle plumbing: weight init/pruning, dataset
+wiring, and the two evaluation paths used by tests/benchmarks/examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compiler, runtime
+from repro.core.compiler import CompiledModel, GNNModelSpec, GraphMeta
+from repro.core.ir import AggOp, KernelType
+from repro.core.profiler import SparsityStats
+from repro.data import graphs as graph_data
+
+GNN_MODELS = ("gcn", "sage", "gin", "sgc")
+
+
+def make_model_spec(model: str, f_in: int, hidden: int, n_classes: int
+                    ) -> GNNModelSpec:
+    """The paper's 2-layer models (Section VIII-A)."""
+    agg = AggOp.MEAN if model == "sage" else AggOp.SUM
+    dims = [f_in, n_classes] if model == "sgc" else [f_in, hidden, n_classes]
+    return GNNModelSpec(model, dims, agg_op=agg)
+
+
+def init_weights(compiled: CompiledModel, *, seed: int = 0,
+                 density: float = 1.0) -> Dict[str, np.ndarray]:
+    """Glorot weights for every Update kernel, magnitude-pruned to
+    ``density`` (paper Section VIII-B evaluates 0-90%+ weight sparsity)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for k in compiled.graph.kernels:
+        if k.kernel_type != KernelType.UPDATE or k.rhs in out:
+            continue
+        lim = np.sqrt(6.0 / (k.f_in + k.f_out))
+        w = rng.uniform(-lim, lim, size=(k.f_in, k.f_out)).astype(np.float32)
+        out[k.rhs] = graph_data.prune_weights(w, density, rng)
+    return out
+
+
+@dataclasses.dataclass
+class DenseGNN:
+    """Engine-ready bundle on a materialized (small) graph."""
+
+    compiled: CompiledModel
+    tensors: Dict[str, jnp.ndarray]
+    graph: graph_data.DenseGraph
+
+    def run(self, engine: Optional[runtime.DynasparseEngine] = None
+            ) -> Tuple[jnp.ndarray, runtime.InferenceReport]:
+        engine = engine or runtime.DynasparseEngine()
+        env, rep = engine.run(self.compiled, self.tensors)
+        return env[self.compiled.graph.kernels[-1].out], rep
+
+
+def build_dense(model: str, dataset: str, *, scale: float = 0.25,
+                n_cc: int = 7, weight_density: float = 1.0, seed: int = 0,
+                on_chip_bytes: Optional[int] = None, align: int = 16
+                ) -> DenseGNN:
+    """Materialize a scaled dataset + compile + init weights (numerics path).
+
+    ``align=16`` keeps partitions meaningful at test scale; production TPU
+    tiling uses 128 (the default elsewhere).
+    """
+    g = graph_data.materialize(dataset, scale=scale, seed=seed)
+    spec = make_model_spec(model, g.spec.f_in, g.spec.hidden, g.spec.n_classes)
+    meta = GraphMeta(dataset, g.spec.n_vertices, g.spec.n_edges, g.spec.f_in)
+    tensors = {
+        "A": jnp.asarray(g.a_gcn),
+        "A_mean": jnp.asarray(g.a_mean),
+        "H0": jnp.asarray(g.h0),
+    }
+    cm = compiler.compile_model(
+        spec, meta, n_cc=n_cc, tensors=tensors, align=align,
+        on_chip_bytes=on_chip_bytes or 256 * 1024)
+    for name, w in init_weights(cm, seed=seed, density=weight_density).items():
+        tensors[name] = jnp.asarray(w)
+        cm.static_stats[name] = SparsityStats.measure(
+            tensors[name], (cm.partition.n2, cm.partition.n2))
+    return DenseGNN(cm, tensors, g)
+
+
+@dataclasses.dataclass
+class SimGNN:
+    """Cost-model bundle at full Table VI scale (no numerics)."""
+
+    compiled: CompiledModel
+    stats: Dict[str, SparsityStats]
+
+    def simulate(self, strategy: str, model=None, n_cc: Optional[int] = None
+                 ) -> runtime.InferenceReport:
+        return runtime.simulate_inference(self.compiled, self.stats,
+                                          strategy=strategy, model=model,
+                                          n_cc=n_cc)
+
+
+def build_sim(model: str, dataset: str, *, n_cc: int = 7,
+              weight_density: float = 1.0, seed: int = 0,
+              relu_keep: float = 0.5, align: int = 16,
+              on_chip_bytes: int = 6 * 1024 * 1024) -> SimGNN:
+    """Full-scale bundle: Alg. 9 partitioning + synthetic block stats +
+    density propagation for the runtime-only intermediate features.
+
+    Defaults model the paper's FPGA: partitions align to p_sys=16 and the
+    per-core buffer budget is ~45MB/7 cores.  (The TPU path uses align=128
+    and the VMEM budget instead.)
+    """
+    spec_g = graph_data.TABLE_VI[dataset]
+    spec = make_model_spec(model, spec_g.f_in, spec_g.hidden,
+                           spec_g.n_classes)
+    meta = GraphMeta(dataset, spec_g.n_vertices, spec_g.n_edges, spec_g.f_in)
+    cm = compiler.compile_model(spec, meta, n_cc=n_cc, align=align,
+                                on_chip_bytes=on_chip_bytes)
+    p = cm.partition
+    stats = graph_data.block_stats(dataset, p.n1, p.n2, seed=seed)
+    for k in cm.graph.kernels:
+        if k.kernel_type != KernelType.UPDATE or k.rhs in stats:
+            continue
+        stats.update(graph_data.weight_stats(
+            [k.f_in, k.f_out], p.n2, weight_density, seed=seed,
+            names=[k.rhs]))
+    stats = runtime.propagate_stats(cm, stats, relu_keep=relu_keep)
+    return SimGNN(cm, stats)

@@ -1,0 +1,281 @@
+"""Shared LM building blocks: norms, RoPE, MLPs, MoE, dynasparse linear.
+
+Everything is function-style over plain dict params (stackable for
+scan-over-layers).  fp32 accumulation in norms/softmax/CE; params and
+activations in the config dtype (bf16 by default).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoECfg
+from repro.core.dynasparse import dynasparse_matmul
+from repro.core.perf_model import TPUCostModel
+from repro.distributed.shardctx import shard
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p: Dict, eps: float):
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+# --------------------------------------------------------------------------
+# RoPE (full / half="2d" ChatGLM-style / none)
+# --------------------------------------------------------------------------
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> sin/cos tables (..., dim//2) in fp32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); sin/cos: (B, S, rot/2).  Rotates the first
+    ``fraction`` of head dims pairwise-interleaved (GLM 2d-RoPE = 0.5)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    xf = xr.astype(jnp.float32).reshape(*xr.shape[:-1], rot // 2, 2)
+    s = sin[..., None, : rot // 2]
+    c = cos[..., None, : rot // 2]
+    r0 = xf[..., 0] * c - xf[..., 1] * s
+    r1 = xf[..., 1] * c + xf[..., 0] * s
+    out = jnp.stack([r0, r1], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# --------------------------------------------------------------------------
+# Dense FFN (+ dynasparse-dispatched variant)
+# --------------------------------------------------------------------------
+
+def _linear(x: jnp.ndarray, w: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """The Update-kernel analogue in the LM: optionally routed through the
+    dynasparse fused engine so pruned weights / sparse activations get
+    per-block primitive dispatch (paper's technique as a first-class LM
+    feature).  Dense einsum otherwise (the dry-run/roofline path)."""
+    if cfg.dynasparse_ffn:
+        x2 = x.reshape(-1, x.shape[-1])
+        res = dynasparse_matmul(x2, w, block=(256, 256, 256),
+                                cost_model=TPUCostModel())
+        return res.out.reshape(*x.shape[:-1], w.shape[-1])
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def mlp(x: jnp.ndarray, p: Dict, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(_linear(x, p["w1"], cfg)) * _linear(x, p["w3"], cfg)
+    else:
+        h = jax.nn.gelu(_linear(x, p["w1"], cfg))
+    return _linear(h, p["w2"], cfg)
+
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    s_in = d ** -0.5
+    s_out = d_ff ** -0.5
+    p = {"w1": jax.random.normal(k1, (d, d_ff), dtype) * s_in,
+         "w2": jax.random.normal(k2, (d_ff, d), dtype) * s_out}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(k3, (d, d_ff), dtype) * s_in
+    return p
+
+
+# --------------------------------------------------------------------------
+# MoE: top-k router + capacity dispatch (Mesh-TF style) + shared experts.
+#
+# The (tokens x experts) routing assignment IS a dynamic sparse matrix --
+# the paper's K2P idea applied to MoE is that dispatch is a block-sparse
+# matmul whose sparsity pattern is runtime data.  The baseline uses one-hot
+# capacity einsum dispatch (collective-free under pure TP sharding); the
+# sort-based ragged dispatch is a recorded hillclimb candidate.
+# --------------------------------------------------------------------------
+
+def moe_capacity(m: MoECfg) -> int:
+    return max(int(m.group_size * m.top_k * m.capacity_factor
+                   / m.n_experts + 0.5), 1)
+
+
+def moe_ffn(x: jnp.ndarray, p: Dict, cfg: ModelConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., D) -> (out, aux_loss).  Shared experts are fused into one
+    dense MLP of width n_shared * expert_d_ff."""
+    m = cfg.moe
+    d = cfg.d_model
+    lead = x.shape[:-1]
+    t = int(functools.reduce(lambda a, b: a * b, lead, 1))
+    xf = x.reshape(t, d)
+    gsz = min(m.group_size, t)
+    pad = (-t) % gsz
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    g = xf.shape[0] // gsz
+    xg = xf.reshape(g, gsz, d)
+    xg = shard(xg, "batch", None, None)   # dispatch groups follow tokens
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, m.top_k)          # (g, s, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_i, m.n_experts, dtype=jnp.bfloat16)
+    if pad:  # padded rows must not consume expert capacity
+        valid = (jnp.arange(g * gsz) < t).reshape(g, gsz)
+        onehot = onehot * valid[..., None, None].astype(onehot.dtype)
+    # position of each (token, choice) within its expert's capacity
+    pos = jnp.cumsum(onehot.reshape(g, gsz * m.top_k, m.n_experts).astype(
+        jnp.float32), axis=1)
+    pos = pos.reshape(g, gsz, m.top_k, m.n_experts) * onehot - 1.0
+    pos_k = jnp.max(pos, axis=-1).astype(jnp.int32)         # (g, s, k)
+    cap = moe_capacity(m)
+    keep = (pos_k >= 0) & (pos_k < cap)
+
+    # GATHER dispatch (zero matmul FLOPs).  The one-hot einsum alternative
+    # costs T*E*cap*D MACs -- 12x grok-1's model FLOPs; caught by the
+    # roofline's useful-ratio check and replaced with slot-inverse gathers.
+    gi = jnp.arange(g)[:, None, None]
+    slot = jnp.where(keep, pos_k, cap)                      # cap = trash slot
+    src = jnp.broadcast_to(jnp.arange(gsz)[None, :, None],
+                           pos_k.shape).astype(jnp.int32)
+    slot_src = jnp.full((g, m.n_experts, cap + 1), gsz, jnp.int32)
+    slot_src = slot_src.at[gi, gate_i, slot].set(src)[..., :cap]
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    flat_idx = slot_src.reshape(g, m.n_experts * cap)
+    xe = jnp.take_along_axis(xg_pad, flat_idx[..., None], axis=1)
+    xe = xe.reshape(g, m.n_experts, cap, d).transpose(1, 0, 2, 3)
+    xe = xe.reshape(m.n_experts, g * cap, d)
+    # expert-capacity tokens shard like tokens; expert hidden over TP.
+    # (unconstrained, GSPMD replicated the (E, G*cap, D) buffer: 32 GiB/chip
+    # for grok-1 -- caught by the first dry-run sweep.)
+    # EP mode: tokens all-to-all to their expert's data shard instead.
+    xe = (shard(xe, "data", None, None) if cfg.moe_ep
+          else shard(xe, None, "batch", None))
+    dff = m.expert_d_ff or cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("etd,edf->etf", xe, p["we1"])) * jnp.einsum(
+            "etd,edf->etf", xe, p["we3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("etd,edf->etf", xe, p["we1"]))
+    h = (shard(h, "data", None, "model") if cfg.moe_ep
+         else shard(h, None, "batch", "model"))
+    ye = jnp.einsum("etf,efd->etd", h, p["we2"])
+    ye = (shard(ye, "data", None, None) if cfg.moe_ep
+          else shard(ye, None, "batch", None))
+    # combine: gather each token's k expert outputs back, weight, sum.
+    ye_g = ye.reshape(m.n_experts, g, cap, d).transpose(1, 0, 2, 3)
+    ye_g = ye_g.reshape(g, m.n_experts * cap, d)
+    tok_idx = (gate_i * cap + jnp.minimum(slot, cap - 1)).reshape(
+        g, gsz * m.top_k)
+    y_tok = jnp.take_along_axis(ye_g, tok_idx[..., None], axis=1)
+    y_tok = y_tok.reshape(g, gsz, m.top_k, d)
+    w_tok = (gate_w * keep).astype(x.dtype)
+    out = jnp.einsum("gsk,gskd->gsd", w_tok, y_tok)
+
+    # load-balance aux loss (Switch): E * mean(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(onehot[..., 0, :] if m.top_k == 1 else
+                    onehot.sum(2) / m.top_k, axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(frac * mean_prob) * m.aux_loss_weight
+
+    out = out.reshape(g * gsz, d)
+    if pad:
+        out = out[:t]
+    out = out.reshape(*lead, d)
+    if m.n_shared:
+        out = out + mlp(x, p["shared"], cfg)
+    return out, aux
+
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dff = m.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts),
+                                    jnp.float32) * d ** -0.5,
+        "we1": jax.random.normal(ks[1], (m.n_experts, d, dff), dtype) * d ** -0.5,
+        "we2": jax.random.normal(ks[2], (m.n_experts, dff, d), dtype) * dff ** -0.5,
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["we3"] = jax.random.normal(ks[3], (m.n_experts, d, dff),
+                                     dtype) * d ** -0.5
+    if m.n_shared:
+        shared_cfg = cfg
+        p["shared"] = init_mlp(ks[4], shared_cfg, dff * m.n_shared, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Chunked cross entropy (big-vocab memory control)
+# --------------------------------------------------------------------------
+
+def chunked_cross_entropy(x: jnp.ndarray, emb: jnp.ndarray,
+                          labels: jnp.ndarray, *, vocab_size: int,
+                          n_chunks: int = 8,
+                          vocab_parallel: bool = False) -> jnp.ndarray:
+    """mean CE of logits = x @ emb.T computed in seq chunks.
+
+    x: (B, S, D); emb: (Vp, D); labels: (B, S) in [0, vocab_size).
+    Padded vocab rows are masked out.
+
+    vocab_parallel=True pins the head weight to P('model', None): the
+    contraction dim is then UNsharded (a ~26 MB/shard weight all-gather
+    over `data`) and logits stay vocab-sharded -- instead of GSPMD
+    all-reducing the full (T, Vp) fp32 logits over `data`
+    (25.6 GB/device/step on deepseek train_4k; Perf hillclimb 3).
+    """
+    b, s, d = x.shape
+    if vocab_parallel:
+        emb = shard(emb, "model", None)
+    n_chunks = max(1, min(n_chunks, s))
+    while s % n_chunks:
+        n_chunks -= 1
+    xs = x.reshape(b, n_chunks, s // n_chunks, d).swapaxes(0, 1)
+    ys = labels.reshape(b, n_chunks, s // n_chunks).swapaxes(0, 1)
+    vp = emb.shape[0]
+    vmask = (jnp.arange(vp) < vocab_size)
+
+    def chunk_loss(carry, xy):
+        xc, yc = xy
+        logits = jnp.einsum("bsd,vd->bsv", xc, emb).astype(jnp.float32)
+        logits = jnp.where(vmask[None, None, :], logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (xs, ys))
+    return total / (b * s)

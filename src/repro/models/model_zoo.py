@@ -1,0 +1,101 @@
+"""ModelBundle: one uniform handle over all 10 architectures.
+
+``build(cfg)`` returns init/loss/prefill/decode closures dispatching on the
+family (decoder-only vs encoder-decoder), so launchers, the dry-run, tests
+and the serving engine never branch on architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init_params: Callable[[Any], Dict]
+    loss_fn: Callable[[Dict, Dict], jnp.ndarray]
+    prefill: Callable[..., Tuple[jnp.ndarray, Dict]]
+    decode_step: Callable[..., Tuple[jnp.ndarray, Dict]]
+    init_caches: Callable[..., Dict]
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    if cfg.encdec is not None:
+        return ModelBundle(
+            cfg=cfg,
+            init_params=lambda rng: encdec.init_params(cfg, rng),
+            loss_fn=lambda p, b: encdec.loss_fn(cfg, p, b),
+            prefill=lambda p, b, **kw: encdec.prefill(
+                cfg, p, b["frames"], b["tokens"], **kw),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(
+                cfg, p, c, t, pos),
+            init_caches=lambda batch, max_seq, enc_len=encdec.ENC_DECODE_LEN:
+                encdec.init_caches(cfg, batch, max_seq, enc_len),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init_params=lambda rng: transformer.init_params(cfg, rng),
+        loss_fn=lambda p, b: transformer.loss_fn(cfg, p, b),
+        prefill=lambda p, b, **kw: transformer.prefill(
+            cfg, p, b["tokens"], **kw),
+        decode_step=lambda p, c, t, pos: transformer.decode_step(
+            cfg, p, c, t, pos),
+        init_caches=lambda batch, max_seq: transformer.init_caches(
+            cfg, batch, max_seq),
+    )
+
+
+# --------------------------------------------------------------------------
+# Input specs: ShapeDtypeStruct stand-ins for every model input of a cell.
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """Abstract inputs for (arch x shape); no device allocation.
+
+    train:   {tokens, labels [, frames]}
+    prefill: {tokens [, frames]}
+    decode:  {tokens (B,1), pos (), caches...} -- caches are supplied by
+             ``abstract_caches`` separately (they are donated state).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.encdec is not None:
+        dec = max(s // cfg.encdec.dec_ratio, 64)
+        frames = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.jdtype)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, dec), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, dec), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, dec), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if shape.kind == "train":
+        return {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s),
+                                                              jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": tok}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(
+        lambda: build(cfg).init_params(jax.random.PRNGKey(0)))
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeCfg) -> Dict:
+    bundle = build(cfg)
+    if cfg.encdec is not None:
+        return jax.eval_shape(
+            lambda: bundle.init_caches(shape.global_batch, shape.seq_len))
+    return jax.eval_shape(
+        lambda: bundle.init_caches(shape.global_batch, shape.seq_len))

@@ -1,0 +1,135 @@
+"""Mamba (S6) mixer for the Jamba hybrid architecture.
+
+Selective state space: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+y_t = C_t . h_t + D x_t, with input-dependent (dt, B, C).
+
+Train/prefill runs a CHUNKED parallel scan: within a chunk the linear
+recurrence is evaluated with ``lax.associative_scan`` (log-depth), chunks
+are stitched by a tiny sequential ``lax.scan`` carrying the state.  The
+chunk length bounds the (B, chunk, d_inner, d_state) working set -- the
+TPU-native tiling of the (GPU-oriented) original's fused kernel; see
+DESIGN.md section 2.  Decode is the exact single-step recurrence over a
+(conv window, ssm state) cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_mamba(rng, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.d_inner(d)
+    dr = m.dt_rank(d)
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (m.d_conv, di), dtype) * 0.3,
+        "x_proj": jax.random.normal(ks[2], (di, dr + 2 * m.d_state),
+                                    dtype) * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dr, di), dtype) * dr ** -0.5,
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (di, m.d_state))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along seq.  x: (B, S, di); w: (K, di).
+    state: (B, K-1, di) left context.  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return y, xp[:, -(k - 1):] if k > 1 else state
+
+
+def _ssm_chunk(a: jnp.ndarray, bu: jnp.ndarray, h0: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Within-chunk linear recurrence via associative scan.
+
+    a, bu: (B, C, di, ds) fp32; h0: (B, di, ds).  h_t = a_t h_{t-1} + bu_t.
+    """
+    # fold the incoming state into the first step
+    bu = bu.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_c, h = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_mixer(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, D).  cache: {"conv": (B, K-1, di), "ssm": (B, di, ds)}."""
+    m = cfg.mamba
+    b, s, d = x.shape
+    di = m.d_inner(d)
+    dr = m.dt_rank(d)
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    conv_state = cache["conv"] if cache is not None else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_state)
+    xin = jax.nn.silu(xin)
+    dbc = xin @ p["x_proj"]
+    dt = jax.nn.softplus(
+        dbc[..., :dr] @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    bmat = dbc[..., dr: dr + m.d_state].astype(jnp.float32)     # (B,S,ds)
+    cmat = dbc[..., dr + m.d_state:].astype(jnp.float32)        # (B,S,ds)
+    a = -jnp.exp(p["a_log"])                                    # (di, ds)
+    ux = (dt * xin.astype(jnp.float32))                         # (B,S,di)
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((b, di, m.d_state), jnp.float32))
+    if s == 1:  # decode: exact single step
+        da = jnp.exp(dt[:, 0, :, None] * a[None])
+        dbu = ux[:, 0, :, None] * bmat[:, 0, None, :]
+        h = da * h0 + dbu
+        y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None, :]
+        h_last = h
+    else:
+        chunk = max(1, min(m.chunk, s))
+        while s % chunk:
+            chunk -= 1
+        n = s // chunk
+        # discretize PER CHUNK inside the scan: the (B, S, di, ds) full-
+        # sequence da/dbu tensors cost 17 GiB/chip on jamba train_4k
+        # (caught by the dry-run sweep).
+        dt_c = dt.reshape(b, n, chunk, di).swapaxes(0, 1)
+        ux_c = ux.reshape(b, n, chunk, di).swapaxes(0, 1)
+        b_c = bmat.reshape(b, n, chunk, m.d_state).swapaxes(0, 1)
+        c_c = cmat.reshape(b, n, chunk, m.d_state).swapaxes(0, 1)
+
+        def step(h_carry, xs_i):
+            dt_i, ux_i, b_i, c_i = xs_i
+            a_i = jnp.exp(dt_i[..., None] * a[None, None])
+            bu_i = ux_i[..., None] * b_i[:, :, None, :]
+            h_all, h_new = _ssm_chunk(a_i, bu_i, h_carry)
+            y_i = jnp.einsum("bcds,bcs->bcd", h_all, c_i)
+            return h_new, y_i
+
+        h_last, ys = jax.lax.scan(step, h0, (dt_c, ux_c, b_c, c_c))
+        y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + xin.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": h_last.astype(cache["ssm"].dtype)}
+    return out, new_cache

@@ -1,0 +1,322 @@
+"""Decoder-only / hybrid LM assembly with scan-over-layers.
+
+Heterogeneous stacks (Jamba's mamba/attn interleave + MoE period, xLSTM's
+mLSTM/sLSTM pattern) are handled by scanning over PERIODS: the stack is
+``n_periods`` repetitions of a ``layer_period``-long pattern; params for
+each position in the pattern are stacked over periods, so one scan step
+applies one full period.  Homogeneous models are the period=1 special case.
+
+Two structural modes (cfg.scan_layers):
+  True  -- scanned/stacked params: real training path; memory_analysis of
+           the dry-run sees full-size parameter/optimizer/activation arrays.
+  False -- unrolled python loop: the dry-run COST proxies (XLA's
+           cost_analysis counts a scan body once, so FLOP-accurate rooflines
+           need unrolled HLO; see launch/dryrun.py).
+
+Caches: a list over period positions; each leaf stacked over periods in
+scanned mode (flat per-layer list when unrolled).  ``{}`` means stateless
+training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.shardctx import shard
+from repro.models import ssm, xlstm
+from repro.models.attention import (gqa_attention, init_gqa, init_mla,
+                                    mla_attention)
+from repro.models.layers import (chunked_cross_entropy, init_mlp, init_moe,
+                                 mlp, moe_ffn, norm)
+
+
+def _init_norm(cfg: ModelConfig) -> Dict:
+    p = {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p = {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+             "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return p
+
+
+def init_block(rng, cfg: ModelConfig, kind: Dict, dtype) -> Dict:
+    ks = jax.random.split(rng, 3)
+    p: Dict[str, Any] = {"ln1": _init_norm(cfg)}
+    mixer = kind["mixer"]
+    if mixer == "attn":
+        p["mix"] = (init_mla(ks[0], cfg, dtype) if cfg.mla is not None
+                    else init_gqa(ks[0], cfg, dtype))
+    elif mixer == "mamba":
+        p["mix"] = ssm.init_mamba(ks[0], cfg, dtype)
+    elif mixer == "mlstm":
+        p["mix"] = xlstm.init_mlstm(ks[0], cfg, dtype)
+    elif mixer == "slstm":
+        p["mix"] = xlstm.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    ffn = kind["ffn"]
+    if ffn != "none":
+        p["ln2"] = _init_norm(cfg)
+        if ffn == "moe":
+            p["ffn"] = init_moe(ks[1], cfg, dtype)
+        elif ffn == "dense_first":
+            p["ffn"] = init_mlp(ks[1], cfg, cfg.d_ff_dense or cfg.d_ff, dtype)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg, cfg.d_ff, dtype)
+    return p
+
+
+def apply_block(x, p: Dict, cfg: ModelConfig, kind: Dict, *,
+                positions, cache: Dict, pos
+                ) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = norm(x, p["ln1"], cfg.norm_eps)
+    # Megatron-SP boundary: gather the sequence dim before the mixer (the
+    # residual carry is sequence-sharded); the mixer output is reduce-
+    # scattered back by the residual-add constraint below.
+    h = shard(h, "batch", None, None)
+    mixer = kind["mixer"]
+    c = cache if cache else None
+    if mixer == "attn":
+        if cfg.mla is not None:
+            out, nc = mla_attention(h, p["mix"], cfg, positions=positions,
+                                    cache=c, pos=pos,
+                                    absorbed=cfg.mla_absorbed)
+        else:
+            out, nc = gqa_attention(h, p["mix"], cfg, positions=positions,
+                                    cache=c, pos=pos)
+        if cfg.n_heads % 16 == 0:
+            pass  # head sharding handled inside via propagation
+    elif mixer == "mamba":
+        out, nc = ssm.mamba_mixer(h, p["mix"], cfg, cache=c)
+    elif mixer == "mlstm":
+        out, nc = xlstm.mlstm_mixer(h, p["mix"], cfg, cache=c)
+    elif mixer == "slstm":
+        out, nc = xlstm.slstm_mixer(h, p["mix"], cfg, cache=c)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    x = shard(x, "batch", "seq", None)
+    if kind["ffn"] != "none":
+        h2 = norm(x, p["ln2"], cfg.norm_eps)
+        h2 = shard(h2, "batch", None, None)
+        if kind["ffn"] == "moe":
+            f, aux = moe_ffn(h2, p["ffn"], cfg)
+        else:
+            f = mlp(h2, p["ffn"], cfg)
+        x = x + f
+        x = shard(x, "batch", "seq", None)
+    return x, (nc if nc is not None else {}), aux
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng) -> Dict:
+    dtype = cfg.jdtype
+    ks = jax.random.split(rng, 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "final_norm": _init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[1], (cfg.padded_vocab, cfg.d_model), dtype) * 0.02
+    if cfg.dense_first_n:
+        kind = {"mixer": "attn", "ffn": "dense_first"}
+        params["dense_first"] = [
+            init_block(jax.random.fold_in(ks[2], i), cfg, kind, dtype)
+            for i in range(cfg.dense_first_n)]
+    period = cfg.layer_period
+    if cfg.scan_layers:
+        stack = []
+        for posn in range(period):
+            kind = cfg.layer_kind(posn)
+            reps = [init_block(jax.random.fold_in(ks[3], posn * 10_000 + r),
+                               cfg, kind, dtype)
+                    for r in range(cfg.n_periods)]
+            stack.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+        params["stack"] = stack
+    else:
+        params["layers"] = [
+            init_block(jax.random.fold_in(ks[3], i), cfg,
+                       cfg.layer_kind(i % period), dtype)
+            for i in range(cfg.n_scan_layers)]
+    return params
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def _cache_for_kind(cfg: ModelConfig, kind: Dict, batch: int, max_seq: int
+                    ) -> Dict:
+    dtype = cfg.jdtype
+    kv_dtype = (getattr(jnp, cfg.kv_cache_dtype) if cfg.kv_cache_dtype
+                else dtype)
+    mixer = kind["mixer"]
+    if mixer == "attn":
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank),
+                                     kv_dtype),
+                    "krope": jnp.zeros((batch, max_seq, m.qk_rope_dim),
+                                       kv_dtype)}
+        hd = cfg.head_dim_
+        return {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd),
+                               kv_dtype),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd),
+                               kv_dtype)}
+    if mixer == "mamba":
+        m = cfg.mamba
+        di = m.d_inner(cfg.d_model)
+        return {"conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+                "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32)}
+    if mixer == "mlstm":
+        di = int(cfg.d_model * cfg.xlstm.mlstm_proj_factor)
+        h = cfg.n_heads
+        hd = di // h
+        return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, h, hd), jnp.float32),
+                "m": jnp.full((batch, h), -10.0, jnp.float32)}
+    if mixer == "slstm":
+        d = cfg.d_model
+        return {"c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.full((batch, d), 1e-6, jnp.float32),
+                "h": jnp.zeros((batch, d), jnp.float32),
+                "m": jnp.full((batch, d), -10.0, jnp.float32)}
+    raise ValueError(mixer)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    period = cfg.layer_period
+    out: Dict[str, Any] = {}
+    if cfg.dense_first_n:
+        out["dense_first"] = [
+            _cache_for_kind(cfg, {"mixer": "attn", "ffn": "dense_first"},
+                            batch, max_seq)
+            for _ in range(cfg.dense_first_n)]
+    mk = lambda posn: _cache_for_kind(cfg, cfg.layer_kind(posn), batch,  # noqa
+                                      max_seq)
+    if cfg.scan_layers:
+        out["stack"] = [
+            jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[mk(posn) for _ in range(cfg.n_periods)])
+            for posn in range(period)]
+    else:
+        out["layers"] = [mk(i % period) for i in range(cfg.n_scan_layers)]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray, *,
+            caches: Optional[Dict] = None, pos=0
+            ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """tokens: (B, S) -> hidden (B, S, D), new caches, aux loss."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = shard(x, "batch", "seq", None)
+    positions = pos + jnp.arange(s)
+    aux_total = jnp.float32(0.0)
+    new_caches: Dict[str, Any] = {}
+
+    def block_fn(x, p, kind, cache):
+        fn = apply_block
+        if cfg.remat:
+            fn = jax.checkpoint(
+                functools.partial(apply_block, cfg=cfg, kind=kind,
+                                  positions=positions, pos=pos),
+                static_argnums=())
+            return fn(x, p, cache=cache)
+        return apply_block(x, p, cfg, kind, positions=positions,
+                           cache=cache, pos=pos)
+
+    if cfg.dense_first_n:
+        df_caches = (caches or {}).get("dense_first",
+                                       [{}] * cfg.dense_first_n)
+        new_dfc = []
+        for p, c in zip(params["dense_first"], df_caches):
+            x, nc, aux = block_fn(x, p, {"mixer": "attn",
+                                         "ffn": "dense_first"}, c)
+            aux_total += aux
+            new_dfc.append(nc)
+        if caches is not None:
+            new_caches["dense_first"] = new_dfc
+
+    period = cfg.layer_period
+    kinds = [cfg.layer_kind(i) for i in range(period)]
+
+    if cfg.scan_layers:
+        stack_caches = (caches or {}).get("stack", [{}] * period)
+
+        def period_body(carry, xs):
+            x, aux = carry
+            pstack, cstack = xs
+            ncs = []
+            for posn in range(period):
+                x, nc, a = block_fn(x, pstack[posn], kinds[posn],
+                                    cstack[posn])
+                aux += a
+                ncs.append(nc)
+            return (x, aux), ncs
+
+        (x, aux_total), nstack = jax.lax.scan(
+            period_body, (x, aux_total), (params["stack"], stack_caches))
+        if caches is not None:
+            new_caches["stack"] = nstack
+    else:
+        layer_caches = (caches or {}).get("layers",
+                                          [{}] * cfg.n_scan_layers)
+        new_lc = []
+        for i, (p, c) in enumerate(zip(params["layers"], layer_caches)):
+            x, nc, a = block_fn(x, p, kinds[i % period], c)
+            aux_total += a
+            new_lc.append(nc)
+        if caches is not None:
+            new_caches["layers"] = new_lc
+
+    x = norm(x, params["final_norm"], cfg.norm_eps)
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def lm_head(cfg: ModelConfig, params: Dict) -> jnp.ndarray:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    x, _, aux = forward(cfg, params, batch["tokens"])
+    ce = chunked_cross_entropy(x, lm_head(cfg, params), batch["labels"],
+                               vocab_size=cfg.vocab_size,
+                               n_chunks=cfg.logit_chunk,
+                               vocab_parallel=cfg.vocab_parallel_ce)
+    return ce + aux
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+            max_seq: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (last-token logits (B, Vp), caches filled to len(tokens))."""
+    b, s = tokens.shape
+    caches = init_caches(cfg, b, max_seq or s)
+    x, caches, _ = forward(cfg, params, tokens, caches=caches, pos=0)
+    logits = x[:, -1] @ lm_head(cfg, params).T
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: Dict, caches: Dict,
+                tokens: jnp.ndarray, pos
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """tokens: (B, 1); pos: scalar int32.  One serving step."""
+    x, caches, _ = forward(cfg, params, tokens, caches=caches, pos=pos)
+    logits = x[:, -1] @ lm_head(cfg, params).T
+    return logits, caches

@@ -1,0 +1,206 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM.
+
+mLSTM: per head a (hd x hd) matrix memory C_t with exponential input gate
+and forget gate; the parallel (training) form is attention-like with a decay
+mask D[t,s] = exp(F_t - F_s + i_s - m_t) (stabilized by the running max m);
+decode is the exact recurrence over (C, n, m).  Implemented as full
+quadratic within the sequence (einsum impl) -- chunked over q like
+attention for memory sanity -- plus the O(1)-state recurrent decode step,
+which is what makes ``long_500k`` runnable for this family.
+
+sLSTM: scalar memory with per-head block-diagonal recurrence; inherently
+sequential -> lax.scan over time (the paper's point: sLSTM trades
+parallelism for memory mixing).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(rng, cfg: ModelConfig, dtype) -> Dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(d * x.mlstm_proj_factor)
+    h = cfg.n_heads
+    ks = jax.random.split(rng, 8)
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "up": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "wq": jax.random.normal(ks[1], (di, di), dtype) * si,
+        "wk": jax.random.normal(ks[2], (di, di), dtype) * si,
+        "wv": jax.random.normal(ks[3], (di, di), dtype) * si,
+        "wi": jax.random.normal(ks[4], (di, h), dtype) * si,
+        "wf": jax.random.normal(ks[5], (di, h), dtype) * si,
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),  # forget-gate open init
+        "onorm": jnp.zeros((di,), jnp.float32),
+        "down": jax.random.normal(ks[6], (di, d), dtype) * si,
+    }
+
+
+def _mlstm_parallel(q, k, v, ig, fg, chunk: int) -> jnp.ndarray:
+    """q,k,v: (B, S, H, hd) fp32; ig/fg: (B, S, H) fp32 log-gates.
+    Returns (B, S, H, hd).  Quadratic stabilized form, scanned over query
+    chunks so the (B, c, S, H) decay mask bounds memory."""
+    b, s, h, hd = q.shape
+    logf = jax.nn.log_sigmoid(fg)                        # (B,S,H)
+    fcum = jnp.cumsum(logf, axis=1)                      # F_t
+    chunk = max(1, min(chunk, s))
+    while s % chunk:
+        chunk -= 1
+    n = s // chunk
+    qs = q.reshape(b, n, chunk, h, hd).swapaxes(0, 1)
+    fs = fcum.reshape(b, n, chunk, h).swapaxes(0, 1)
+    offs = jnp.arange(n) * chunk
+    spos = jnp.arange(s)
+
+    def step(_, qfo):
+        qc, fc, off = qfo
+        # log D[t, s'] = F_t - F_{s'} + i_{s'} for s' <= t
+        logd = fc[:, :, None] - fcum[:, None, :] + ig[:, None, :, :]
+        causal = (off + jnp.arange(chunk))[:, None] >= spos[None, :]
+        logd = jnp.where(causal[None, :, :, None], logd, -jnp.inf)
+        m = jnp.max(logd, axis=2, keepdims=True)         # (B,c,1,H)
+        dmat = jnp.exp(logd - m)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, k) * (hd ** -0.5)
+        w = scores * dmat
+        norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))
+        return None, jnp.einsum("btsh,bshd->bthd", w, v) / norm[..., None]
+
+    _, outs = jax.lax.scan(step, None, (qs, fs, offs))
+    return outs.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def mlstm_mixer(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """cache: {"c": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)} fp32."""
+    xl = cfg.xlstm
+    b, s, d = x.shape
+    di = int(d * xl.mlstm_proj_factor)
+    h = cfg.n_heads
+    hd = di // h
+    up = x @ p["up"]
+    xm, z = up[..., :di], up[..., di:]
+    q = (xm @ p["wq"]).reshape(b, s, h, hd).astype(jnp.float32)
+    k = (xm @ p["wk"]).reshape(b, s, h, hd).astype(jnp.float32)
+    v = (xm @ p["wv"]).reshape(b, s, h, hd).astype(jnp.float32)
+    ig = (xm @ p["wi"]).astype(jnp.float32)              # (B,S,H) log-scale
+    fg = (xm @ p["wf"]).astype(jnp.float32) + p["f_bias"]
+
+    new_cache = None
+    if s == 1 and cache is not None:
+        # exact recurrent step
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(fg[:, 0])              # (B,H)
+        i0 = ig[:, 0]
+        m1 = jnp.maximum(logf + m0, i0)
+        fdec = jnp.exp(logf + m0 - m1)[..., None]
+        iinc = jnp.exp(i0 - m1)[..., None]
+        kk = k[:, 0]                                     # (B,H,hd)
+        c1 = fdec[..., None] * c0 + iinc[..., None] * jnp.einsum(
+            "bhd,bhe->bhde", kk * (hd ** -0.5), v[:, 0])
+        n1 = fdec * n0 + iinc * (kk * (hd ** -0.5))
+        hq = q[:, 0]                                     # (B,H,hd)
+        num = jnp.einsum("bhd,bhde->bhe", hq, c1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", hq, n1)),
+                          jnp.exp(-m1))
+        o = (num / den[..., None])[:, None]              # (B,1,H,hd)
+        new_cache = {"c": c1.astype(cache["c"].dtype),
+                     "n": n1.astype(cache["n"].dtype),
+                     "m": m1.astype(cache["m"].dtype)}
+    else:
+        o = _mlstm_parallel(q, k, v, ig, fg, xl.chunk)
+        if cache is not None:
+            # rebuild the recurrent state from the full pass (prefill)
+            logf = jax.nn.log_sigmoid(fg)
+            fcum = jnp.cumsum(logf, axis=1)
+            w_s = fcum[:, -1:, :] - fcum + ig            # (B,S,H)
+            m1 = jnp.max(w_s, axis=1)                    # (B,H)
+            gam = jnp.exp(w_s - m1[:, None])
+            c1 = jnp.einsum("bsh,bshd,bshe->bhde", gam, k * (hd ** -0.5), v)
+            n1 = jnp.einsum("bsh,bshd->bhd", gam, k * (hd ** -0.5))
+            new_cache = {"c": c1.astype(cache["c"].dtype),
+                         "n": n1.astype(cache["n"].dtype),
+                         "m": m1.astype(cache["m"].dtype)}
+    o = o.astype(x.dtype).reshape(b, s, di)
+    o = rmsnorm(o, p["onorm"], cfg.norm_eps)
+    return (o * jax.nn.silu(z)) @ p["down"], new_cache
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(rng, cfg: ModelConfig, dtype) -> Dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dff = int(d * x.slstm_proj_factor)
+    ks = jax.random.split(rng, 7)
+    s = d ** -0.5
+    return {
+        "wx": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,     # i,f,z,o
+        "wr": jax.random.normal(ks[1], (4, h, dh, dh), dtype) * dh ** -0.5,
+        "bias": jnp.zeros((4, d), jnp.float32),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "onorm": jnp.zeros((d,), jnp.float32),
+        "w1": jax.random.normal(ks[2], (d, dff), dtype) * s,
+        "w2": jax.random.normal(ks[3], (dff, d), dtype) * dff ** -0.5,
+    }
+
+
+def slstm_mixer(x: jnp.ndarray, p: Dict, cfg: ModelConfig, *,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Sequential scan.  cache: {"c","n","h","m": (B, D)} fp32 states."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    gates_x = (x @ p["wx"]).astype(jnp.float32).reshape(b, s, 4, d)
+    gates_x = gates_x + p["bias"]
+    gates_x = gates_x.at[:, :, 1].add(p["f_bias"])
+    wr = p["wr"].astype(jnp.float32)
+
+    def state0():
+        z = jnp.zeros((b, d), jnp.float32)
+        return {"c": z, "n": z + 1e-6, "h": z, "m": z - 10.0}
+
+    st = ({k: v.astype(jnp.float32) for k, v in cache.items()}
+          if cache is not None else state0())
+
+    def step(st, gx):
+        hprev = st["h"].reshape(b, h, dh)
+        rec = jnp.einsum("ghde,bhd->gbhe", wr.transpose(0, 1, 2, 3), hprev)
+        rec = rec.transpose(1, 0, 2, 3).reshape(b, 4, d)
+        gi, gf, gz, go = jnp.moveaxis(gx + rec, 1, 0)
+        logf = jax.nn.log_sigmoid(gf)
+        m1 = jnp.maximum(logf + st["m"], gi)
+        i_ = jnp.exp(gi - m1)
+        f_ = jnp.exp(logf + st["m"] - m1)
+        c1 = f_ * st["c"] + i_ * jnp.tanh(gz)
+        n1 = f_ * st["n"] + i_
+        h1 = jax.nn.sigmoid(go) * c1 / jnp.maximum(n1, 1e-6)
+        return {"c": c1, "n": n1, "h": h1, "m": m1}, h1
+
+    st_out, hs = jax.lax.scan(step, st, gates_x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                # (B,S,D)
+    y = rmsnorm(y, p["onorm"], cfg.norm_eps)
+    y = jax.nn.gelu(y @ p["w1"]) @ p["w2"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {k: v.astype(cache[k].dtype) for k, v in st_out.items()}
+    return y, new_cache

@@ -1,0 +1,138 @@
+"""Fault-tolerant training loop + jitted train step factory.
+
+``make_train_step`` builds the compiled step: microbatched gradient
+accumulation (lax.scan), AdamW update, metrics.  ``Trainer`` owns the
+run loop: checkpoint/restart (resume is exact -- the data pipeline is a
+pure function of step), straggler detection (per-step timing vs rolling
+median -> logged + counted; on real fleets this feeds the re-scheduler),
+and a failure-injection hook used by the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(loss_fn: Callable[[Any, Dict], jnp.ndarray],
+                    optimizer: AdamW, *, num_microbatches: int = 1):
+    """loss_fn(params, batch) -> scalar.  Returns train_step(state, batch).
+
+    With num_microbatches > 1 the batch's leading dim is split and grads
+    accumulate in fp32 across a lax.scan -- live activation memory drops by
+    the microbatch factor (how the 100B+ archs fit; see DESIGN.md).
+    """
+
+    def compute_grads(params, batch):
+        if num_microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % num_microbatches == 0, (b, num_microbatches)
+            return x.reshape(num_microbatches, b // num_microbatches,
+                             *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        # f32 accumulators unless the arch runs a bf16 optimizer to fit HBM
+        # (grok/mistral); then grads accumulate in param dtype too.
+        acc_dt = (jnp.bfloat16 if optimizer.state_dtype == "bfloat16"
+                  else jnp.float32)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def acc(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(acc_dt), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zero), mbs)
+        inv = 1.0 / num_microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch: Dict):
+        loss, grads = compute_grads(state.params, batch)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "lr": optimizer.schedule(opt.step), "step": opt.step}
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Restartable loop around a compiled train step."""
+
+    train_step: Callable
+    batch_for_step: Callable[[int], Dict]   # step -> host batch
+    state: TrainState
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    # test hook: raise at a given step to simulate a node failure
+    failure_at_step: Optional[int] = None
+
+    step: int = 0
+    straggler_events: int = 0
+    _times: list = dataclasses.field(default_factory=list)
+
+    def maybe_restore(self) -> bool:
+        if not self.ckpt_dir:
+            return False
+        try:
+            self.state, self.step = ckpt_lib.restore(
+                self.ckpt_dir, self.state)
+            self.step = int(self.step)
+            return True
+        except FileNotFoundError:
+            return False
+
+    def run(self, num_steps: int, log: Callable[[str], None] = print
+            ) -> Dict[str, float]:
+        last = {}
+        target = self.step + num_steps
+        while self.step < target:
+            if self.failure_at_step is not None and \
+                    self.step == self.failure_at_step:
+                self.failure_at_step = None  # fail once
+                raise RuntimeError(f"injected failure at step {self.step}")
+            t0 = time.perf_counter()
+            batch = self.batch_for_step(self.step)
+            self.state, metrics = self.train_step(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self._times.append(dt)
+            med = float(np.median(self._times[-50:]))
+            if len(self._times) > 5 and dt > self.straggler_factor * med:
+                self.straggler_events += 1
+                log(f"[straggler] step {self.step}: {dt:.3f}s vs median "
+                    f"{med:.3f}s")
+            self.step += 1
+            if self.step % self.log_every == 0:
+                log(f"step {self.step}: loss={metrics['loss']:.4f} "
+                    f"gnorm={metrics['grad_norm']:.3f} {dt:.3f}s/step")
+            if self.ckpt_dir and self.step % self.ckpt_every == 0:
+                ckpt_lib.save_async(self.ckpt_dir, self.step,
+                                    self.state)
+                ckpt_lib.gc_old(self.ckpt_dir, self.keep_ckpts)
+            last = metrics
+        if self.ckpt_dir:
+            ckpt_lib.save(self.ckpt_dir, self.step, self.state)
+            ckpt_lib.gc_old(self.ckpt_dir, self.keep_ckpts)
+        return last

@@ -1,0 +1,19 @@
+"""Test env: single CPU device (the dry-run's 512-device override is
+strictly scoped to launch/dryrun.py; tests and benches must see 1 device).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def sparse_matrix(rng, m, n, density, dtype=np.float32):
+    x = rng.normal(size=(m, n)).astype(dtype)
+    return x * (rng.random((m, n)) < density)

@@ -1,0 +1,64 @@
+"""Fused-mode dynasparse matmul: value preservation + dispatch codes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.dynasparse import (dynasparse_dense_equivalent,
+                                   dynasparse_matmul)
+from repro.core.perf_model import FPGACostModel, Primitive, TPUCostModel
+
+RNG = np.random.default_rng(3)
+
+
+def sparse(m, n, density):
+    x = RNG.normal(size=(m, n)).astype(np.float32)
+    return jnp.asarray(x * (RNG.random((m, n)) < density))
+
+
+@pytest.mark.parametrize("cost_model", [FPGACostModel(), TPUCostModel()])
+@pytest.mark.parametrize("dens", [0.0, 0.05, 0.6])
+def test_value_equals_dense(cost_model, dens):
+    x, y = sparse(96, 128, dens), sparse(128, 64, 0.8)
+    r = dynasparse_matmul(x, y, block=(32, 32, 32), cost_model=cost_model)
+    np.testing.assert_allclose(
+        np.asarray(r.out), np.asarray(dynasparse_dense_equivalent(x, y)),
+        atol=2e-4, rtol=2e-4)
+
+
+def test_codes_follow_block_density():
+    x = jnp.zeros((64, 64), jnp.float32)
+    x = x.at[:32, :32].set(1.0)                  # dense block
+    x = x.at[32:, :32].set(
+        jnp.asarray((RNG.random((32, 32)) < 0.05).astype(np.float32)))
+    y = jnp.ones((64, 32), jnp.float32)
+    r = dynasparse_matmul(x, y, block=(32, 32, 32),
+                          cost_model=FPGACostModel())
+    codes = np.asarray(r.codes)                  # (I=2, J=1, K=2)
+    assert codes[0, 0, 0] == Primitive.GEMM      # dense x dense
+    assert codes[0, 0, 1] == Primitive.SKIP      # zero block skipped
+    assert codes[1, 0, 0] == Primitive.SPDMM     # sparse x dense
+    assert codes[1, 0, 1] == Primitive.SKIP
+
+
+def test_use_kernels_branches():
+    x, y = sparse(32, 32, 0.1), sparse(32, 32, 0.9)
+    r = dynasparse_matmul(x, y, block=(16, 16, 16),
+                          cost_model=FPGACostModel(), use_kernels=True,
+                          tile=(8, 8))
+    np.testing.assert_allclose(
+        np.asarray(r.out), np.asarray(dynasparse_dense_equivalent(x, y)),
+        atol=1e-3, rtol=1e-3)
+
+
+def test_jit_composability():
+    import jax
+
+    @jax.jit
+    def f(x, y):
+        return dynasparse_matmul(x, y, block=(32, 32, 32),
+                                 cost_model=TPUCostModel()).out
+
+    x, y = sparse(64, 64, 0.2), sparse(64, 64, 0.7)
+    np.testing.assert_allclose(
+        np.asarray(f(x, y)),
+        np.asarray(dynasparse_dense_equivalent(x, y)), atol=2e-4, rtol=2e-4)

@@ -1,0 +1,77 @@
+"""D2S / S2D / Block-CSR round-trip properties (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats
+
+RNG = np.random.default_rng(7)
+
+
+def sparse(m, n, density):
+    x = RNG.normal(size=(m, n)).astype(np.float32)
+    return jnp.asarray(x * (RNG.random((m, n)) < density))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 40), n=st.integers(1, 40),
+       density=st.floats(0.0, 1.0))
+def test_coo_roundtrip(m, n, density):
+    x = sparse(m, n, density)
+    coo = formats.dense_to_coo(x)
+    back = formats.coo_to_dense(coo)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    assert int(coo.nnz) == int(np.count_nonzero(np.asarray(x)))
+
+
+def test_coo_row_major_order():
+    x = sparse(10, 10, 0.3)
+    coo = formats.dense_to_coo(x)
+    nnz = int(coo.nnz)
+    keys = np.asarray(coo.rows)[:nnz] * 10 + np.asarray(coo.cols)[:nnz]
+    assert np.all(np.diff(keys) > 0)  # strict row-major order (the paper's
+    #                                   SpDMM/SPMM operand requirement)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mb=st.integers(1, 5), kb=st.integers(1, 5),
+       density=st.floats(0.0, 1.0))
+def test_bcsr_roundtrip(mb, kb, density):
+    x = sparse(mb * 8, kb * 8, density)
+    b = formats.dense_to_bcsr(x, (8, 8))
+    back = formats.bcsr_to_dense(b)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_bcsr_counts_and_sorted_cols():
+    x = sparse(32, 48, 0.15)
+    b = formats.dense_to_bcsr(x, (8, 8))
+    occ = np.asarray(formats.tile_view(x, (8, 8)))
+    occ = np.any(occ != 0, axis=(2, 3))
+    np.testing.assert_array_equal(np.asarray(b.counts), occ.sum(1))
+    for i in range(occ.shape[0]):
+        c = int(b.counts[i])
+        cols = np.asarray(b.col_idx[i][:c])
+        assert np.all(np.diff(cols) > 0)
+
+
+def test_bcsc_roundtrip_via_spmm_plan():
+    from repro.kernels.spmm import plan_intersection
+    x = sparse(24, 32, 0.2)
+    y = sparse(32, 16, 0.3)
+    xb = formats.dense_to_bcsr(x, (8, 8))
+    yb = formats.dense_to_bcsc(y, (8, 8))
+    plan = plan_intersection(xb, yb)
+    occ_x = np.any(np.asarray(formats.tile_view(x, (8, 8))) != 0, axis=(2, 3))
+    occ_y = np.any(np.asarray(formats.tile_view(y, (8, 8))) != 0, axis=(2, 3))
+    want = np.einsum("ik,kj->ij", occ_x.astype(int), occ_y.astype(int))
+    # counts = |{k: X[i,k] nonzero AND Y[k,j] nonzero}|
+    inter = (occ_x[:, None, :] & occ_y.T[None, :, :]).sum(-1)
+    np.testing.assert_array_equal(np.asarray(plan.counts), inter)
+
+
+def test_capacity_overflow_drops_into_pad():
+    x = jnp.ones((4, 4), jnp.float32)
+    coo = formats.dense_to_coo(x, capacity=8)  # 16 nonzeros, cap 8
+    assert int(coo.nnz) == 8
+    assert coo.rows.shape == (8,)

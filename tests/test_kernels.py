@@ -1,0 +1,104 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def sparse(m, n, density, dtype=np.float32):
+    x = RNG.normal(size=(m, n)).astype(dtype)
+    return jnp.asarray(x * (RNG.random((m, n)) < density))
+
+
+SHAPES = [(16, 16, 16), (64, 96, 32), (100, 130, 50), (33, 7, 129)]
+DENSITIES = [0.0, 0.03, 0.35, 1.0]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("density", DENSITIES)
+def test_gemm_spdmm_spmm_match_oracle(shape, density):
+    m, k, n = shape
+    x, y = sparse(m, k, density), sparse(k, n, 0.4)
+    want = np.asarray(ref.ref_matmul(x, y))
+    tile = (16, 16)
+    for name, got in [
+        ("gemm", ops.gemm(x, y, tile=(16, 16, 16))),
+        ("spdmm", ops.spdmm(x, y, tile=tile, bn=16)),
+        ("spdmm_rhs", ops.spdmm(y.T, x.T, tile=tile, bn=16,
+                                sparse_rhs=True).T),
+        ("spmm", ops.spmm(x, y, tile=tile)),
+    ]:
+        np.testing.assert_allclose(np.asarray(got), want, atol=3e-4,
+                                   rtol=3e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernels_dtypes(dtype):
+    x = sparse(32, 48, 0.2).astype(dtype)
+    y = sparse(48, 32, 0.5).astype(dtype)
+    want = np.asarray(ref.ref_matmul(x, y), np.float32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 3e-4
+    for got in (ops.gemm(x, y, tile=(16, 16, 16)),
+                ops.spdmm(x, y, tile=(16, 16), bn=16),
+                ops.spmm(x, y, tile=(16, 16))):
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   atol=tol, rtol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(dx=st.floats(0.0, 1.0), dy=st.floats(0.0, 1.0),
+       m=st.integers(1, 5), k=st.integers(1, 5), n=st.integers(1, 4))
+def test_sparse_kernels_property(dx, dy, m, k, n):
+    """The primitive NEVER changes the value, only the cost -- any density,
+    any (non-tile-multiple) shape."""
+    x, y = sparse(m * 11, k * 13, dx), sparse(k * 13, n * 17, dy)
+    want = np.asarray(ref.ref_matmul(x, y))
+    got = ops.spmm(x, y, tile=(16, 16))
+    np.testing.assert_allclose(np.asarray(got), want, atol=3e-4, rtol=3e-4)
+    got2 = ops.spdmm(x, y, tile=(16, 16), bn=16)
+    np.testing.assert_allclose(np.asarray(got2), want, atol=3e-4, rtol=3e-4)
+
+
+def test_profiler_counts():
+    x = sparse(100, 70, 0.13)
+    got = np.asarray(ops.tile_nnz(x, tile=(16, 16)))
+    want = np.asarray(ref.ref_tile_nnz(x, (16, 16)))
+    assert np.array_equal(got, want)
+    assert got.sum() == int(np.count_nonzero(np.asarray(x)))
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("sq,skv", [(32, 32), (16, 64), (40, 64)])
+def test_flash_attention(causal, sq, skv):
+    q = jnp.asarray(RNG.normal(size=(2, 3, sq, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 3, skv, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 3, skv, 16)).astype(np.float32))
+    if not causal and skv % 16:
+        pytest.skip("non-causal requires kv tile multiple")
+    got = ops.flash_attention(q, k, v, causal=causal, bq=16, bk=16)
+    want = ref.ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_flash_attention_gqa():
+    q = jnp.asarray(RNG.normal(size=(2, 8, 32, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 2, 32, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 2, 32, 16)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    want = ref.ref_attention(q, jnp.repeat(k, 4, 1), jnp.repeat(v, 4, 1),
+                             causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_matmul_dispatch_skip():
+    """Primitive.SKIP short-circuits to zeros without computing."""
+    from repro.core.perf_model import Primitive
+    x, y = sparse(16, 16, 0.0), sparse(16, 16, 1.0)
+    out = ops.matmul(x, y, Primitive.SKIP, tile=(16, 16))
+    assert np.all(np.asarray(out) == 0)

@@ -1,0 +1,87 @@
+"""RoPE / norms / chunked-CE / dynasparse-linear properties."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models.layers import (apply_rope, chunked_cross_entropy,
+                                 layernorm, mlp, rmsnorm, rope_tables)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(RNG, (2, 8, 4, 16))
+    sin, cos = rope_tables(jnp.arange(8), 16, 1e4)
+    y = apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m - n."""
+    q = jax.random.normal(RNG, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+
+    def dot_at(m, n):
+        sq, cq = rope_tables(jnp.array([m]), 16, 1e4)
+        sk, ck = rope_tables(jnp.array([n]), 16, 1e4)
+        qr = apply_rope(q, sq, cq)[0, 0, 0]
+        kr = apply_rope(k, sk, ck)[0, 0, 0]
+        return float(jnp.dot(qr, kr))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(7, 3)) > 1e-6  # actually varies
+
+
+def test_rope_half_leaves_tail_untouched():
+    x = jax.random.normal(RNG, (1, 4, 2, 16))
+    sin, cos = rope_tables(jnp.arange(4), 8, 1e4)
+    y = apply_rope(x, sin, cos, fraction=0.5)
+    np.testing.assert_array_equal(np.asarray(x[..., 8:]),
+                                  np.asarray(y[..., 8:]))
+    assert not np.allclose(np.asarray(x[..., :8])[0, 1:],
+                           np.asarray(y[..., :8])[0, 1:])
+
+
+def test_norms():
+    x = jax.random.normal(RNG, (4, 32)) * 3 + 1
+    y = rmsnorm(x, jnp.zeros((32,)))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+    z = layernorm(x, jnp.ones((32,)), jnp.zeros((32,)))
+    np.testing.assert_allclose(np.asarray(z).mean(-1), 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(z).std(-1), 1.0, atol=1e-3)
+
+
+def test_chunked_ce_equals_direct():
+    b, s, d, v = 2, 16, 8, 50
+    x = jax.random.normal(RNG, (b, s, d))
+    emb = jax.random.normal(jax.random.PRNGKey(1), (64, d))  # padded vocab
+    labels = jax.random.randint(RNG, (b, s), 0, v)
+    got = chunked_cross_entropy(x, emb, labels, vocab_size=v, n_chunks=4)
+    logits = np.asarray(x @ emb.T, np.float64)[:, :, :v]
+    logz = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+        + logits.max(-1)
+    gold = np.take_along_axis(logits, np.asarray(labels)[..., None],
+                              -1)[..., 0]
+    want = (logz - gold).mean()
+    assert abs(float(got) - want) < 1e-3
+
+
+def test_dynasparse_linear_matches_dense():
+    cfg = smoke_config("llama3-8b")
+    cfg_ds = dataclasses.replace(cfg, dynasparse_ffn=True)
+    p = {"w1": jax.random.normal(RNG, (cfg.d_model, 256), jnp.float32),
+         "w2": jax.random.normal(RNG, (256, cfg.d_model), jnp.float32),
+         "w3": jax.random.normal(RNG, (cfg.d_model, 256), jnp.float32)}
+    # prune w1/w3 heavily: dispatcher should still be exact
+    mask = jax.random.uniform(RNG, p["w1"].shape) < 0.05
+    p = dict(p, w1=p["w1"] * mask, w3=p["w3"] * mask)
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 8, cfg.d_model))
+    np.testing.assert_allclose(np.asarray(mlp(x, p, cfg_ds)),
+                               np.asarray(mlp(x, p, cfg)),
+                               atol=2e-3, rtol=2e-3)

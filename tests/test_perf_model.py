@@ -1,0 +1,77 @@
+"""Table IV / Algorithm 7 properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import (FPGACostModel, Primitive, TPUCostModel,
+                                   predict_output_density)
+
+FP = FPGACostModel()
+TP = TPUCostModel()
+
+
+@settings(max_examples=200, deadline=None)
+@given(ax=st.floats(0.0, 1.0, width=32), ay=st.floats(0.0, 1.0, width=32))
+def test_alg7_is_argmin_of_table4(ax, ay):
+    """The closed-form decision rule == argmin of the analytical costs."""
+    sel = FP.select(ax, ay)
+    if min(ax, ay) == 0.0:
+        assert sel == Primitive.SKIP
+        return
+    m = n = d = 512
+    costs = {p: float(FP.cycles(p, m, n, d, ax, ay))
+             for p in (Primitive.GEMM, Primitive.SPDMM, Primitive.SPMM)}
+    best = min(costs.values())
+    assert costs[sel] <= best + 1e-9
+
+
+def test_alg7_crossovers_exact():
+    """Paper's thresholds: a_min=1/2 (GEMM/SpDMM), a_max=2/p (SpDMM/SPMM)."""
+    p = FP.p_sys
+    assert FP.select(0.5, 0.9) == Primitive.GEMM
+    assert FP.select(0.499, 0.9) == Primitive.SPDMM
+    assert FP.select(0.01, 2.0 / p) == Primitive.SPDMM
+    assert FP.select(0.01, 2.0 / p - 1e-6) == Primitive.SPMM
+    assert FP.select(0.0, 1.0) == Primitive.SKIP
+
+
+@settings(max_examples=100, deadline=None)
+@given(ax=st.floats(0.0, 1.0, width=32, allow_subnormal=False),
+       ay=st.floats(0.0, 1.0, width=32, allow_subnormal=False))
+def test_select_traced_matches_host(ax, ay):
+    # subnormals excluded: XLA flushes them to zero (SKIP), the host
+    # float64 path does not -- both behaviors are defensible.
+    import jax.numpy as jnp
+    got = int(FP.select_traced(jnp.float32(ax), jnp.float32(ay)))
+    assert got == int(FP.select(ax, ay))
+
+
+@settings(max_examples=50, deadline=None)
+@given(bx=st.floats(0.0, 1.0, width=32), by=st.floats(0.0, 1.0, width=32))
+def test_tpu_model_select_is_argmin(bx, by):
+    sel = TP.select(bx, by)
+    if min(bx, by) == 0.0:
+        assert sel == Primitive.SKIP
+        return
+    costs = {p: float(TP.seconds(p, 128, 128, 128, bx, by))
+             for p in (Primitive.GEMM, Primitive.SPDMM, Primitive.SPMM)}
+    assert costs[sel] <= min(costs.values()) + 1e-12
+
+
+def test_tpu_model_monotone_in_density():
+    """Sparser inputs never cost more under SpDMM/SPMM."""
+    s1 = float(TP.spdmm_seconds(512, 512, 512, 0.1, 1.0))
+    s2 = float(TP.spdmm_seconds(512, 512, 512, 0.5, 1.0))
+    assert s1 <= s2
+    p1 = float(TP.spmm_seconds(512, 512, 512, 0.1, 0.1))
+    p2 = float(TP.spmm_seconds(512, 512, 512, 0.5, 0.5))
+    assert p1 <= p2
+
+
+def test_output_density_prediction():
+    assert predict_output_density(0.0, 1.0, 100) == 0.0
+    assert abs(predict_output_density(1.0, 1.0, 100) - 1.0) < 1e-9
+    mid = predict_output_density(0.05, 0.05, 128)
+    assert 0.0 < mid < 1.0
+    # monotone in n
+    assert predict_output_density(0.05, 0.05, 256) > mid

@@ -1,0 +1,97 @@
+"""Serving engine + synthetic graph dataset statistics."""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import graphs
+from repro.models import model_zoo
+from repro.serving.engine import Request, ServeEngine
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = smoke_config("llama3.2-1b", n_layers=2)
+    bundle = model_zoo.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, slots=4, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, size=(8,)).astype(
+        np.int32), max_new_tokens=6, request_id=i) for i in range(6)]
+    r1 = eng.generate(list(reqs))
+    r2 = eng.generate(list(reqs))
+    assert len(r1) == 6
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert len(a.tokens) == 6
+        assert a.tokens.max() < cfg.vocab_size
+
+
+def test_serve_engine_waves_exceed_slots():
+    cfg = smoke_config("llama3.2-1b", n_layers=2)
+    bundle = model_zoo.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, slots=2, max_seq=32)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, size=(4 + i,)).astype(
+        np.int32), max_new_tokens=3, request_id=i) for i in range(5)]
+    res = eng.generate(reqs)
+    assert sorted(r.request_id for r in res) == list(range(5))
+
+
+def test_dynasparse_serving_matches_dense():
+    """The paper's technique at serve time: pruned-FFN decode through the
+    dynamic dispatcher == dense math."""
+    from repro.launch.serve import prune_ffn
+    cfg = smoke_config("llama3.2-1b", n_layers=2)
+    bundle_d = model_zoo.build(cfg)
+    params = bundle_d.init_params(jax.random.PRNGKey(0))
+    params = prune_ffn(params, 0.1, np.random.default_rng(0))
+    cfg_ds = dataclasses.replace(cfg, dynasparse_ffn=True)
+    bundle_s = model_zoo.build(cfg_ds)
+    rng = np.random.default_rng(2)
+    prompts = [Request(rng.integers(0, cfg.vocab_size, size=(8,)).astype(
+        np.int32), max_new_tokens=4, request_id=i) for i in range(2)]
+    r_dense = ServeEngine(bundle_d, params, slots=2,
+                          max_seq=16).generate(list(prompts))
+    r_ds = ServeEngine(bundle_s, params, slots=2,
+                       max_seq=16).generate(list(prompts))
+    for a, b in zip(r_dense, r_ds):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ------------------------------------------------------------- datasets --
+
+@pytest.mark.parametrize("name", ["CI", "CO", "PU"])
+def test_block_stats_match_table_vi(name):
+    spec = graphs.TABLE_VI[name]
+    stats = graphs.block_stats(name, 256, 64)
+    a = stats["A"]
+    # mean block density ~= Table VI adjacency density (within 3x: power
+    # law + self loops skew the mean)
+    mean_d = float(np.average(
+        a.block_densities,
+        weights=np.ones_like(a.block_densities)))
+    assert mean_d == pytest.approx(spec.density_a, rel=3.0, abs=5e-3)
+    h = stats["H0"]
+    assert h.density == pytest.approx(spec.density_h0, rel=0.5, abs=2e-3)
+
+
+def test_materialize_respects_scale():
+    g = graphs.materialize("PU", scale=0.05, seed=0)
+    assert g.spec.n_vertices <= 4096
+    assert abs(g.h0.shape[0] - g.spec.n_vertices) == 0
+    # adjacency normalizations
+    rows = g.a_mean.sum(1)
+    np.testing.assert_allclose(rows, 1.0, atol=1e-5)
+    assert (g.h0 != 0).mean() == pytest.approx(graphs.TABLE_VI["PU"].
+                                               density_h0, rel=0.8)
+
+
+def test_prune_weights_density():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    for d in (0.5, 0.1, 0.0):
+        p = graphs.prune_weights(w, d, rng)
+        assert (p != 0).mean() == pytest.approx(d, abs=0.02)
