@@ -1,0 +1,150 @@
+"""Unified jit-compiled executor vs. the seed host-loop engine.
+
+The seed ``DynasparseEngine`` executed every kernel through a Python triple
+loop over (I, J, K) blocks with a host-side ``Primitive(int(code))``
+dispatch per reduction step -- one eager XLA launch per block pair.  The
+unified executor (this PR) traces each kernel once (profile -> plan ->
+``lax.switch`` dispatch -> fused epilogue in a single XLA program) and
+caches the executable per (shapes, block, strategy, epilogue) signature.
+
+``SeedHostLoopEngine`` below is a faithful replica of the seed path, kept
+here (not in ``core``) purely as the benchmark baseline.  Wall clocks are
+steady-state (first run warms compile caches for the unified engine and JAX
+dispatch caches for the seed loop); the emitted ``BENCH_engine.json`` starts
+the perf trajectory for the ROADMAP scaling work.
+
+  PYTHONPATH=src python -m benchmarks.run --only engine
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, geomean
+from repro.core import analyzer, runtime, scheduler
+from repro.core.ir import Activation, AggOp, KernelType
+from repro.core.perf_model import FPGACostModel, Primitive
+from repro.core.profiler import block_density
+from repro.models import gnn as gnn_models
+
+_OUT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+
+
+class SeedHostLoopEngine:
+    """The seed engine's execution path: per-block host dispatch (eager)."""
+
+    def __init__(self, strategy: str = "dynamic"):
+        self.strategy = strategy
+        self.model = FPGACostModel()
+
+    def run(self, compiled, tensors):
+        env = dict(tensors)
+        for k in compiled.graph.topo_order():
+            env[k.out] = self._run_kernel(k, env)
+        return env[compiled.graph.kernels[-1].out]
+
+    def _run_kernel(self, k, env):
+        bm, bk, bn = k.block_dims
+        if k.kernel_type == KernelType.AGGREGATE:
+            x = env["A" if k.agg_op == AggOp.SUM else "A_mean"]
+        else:
+            x = env[k.lhs]
+        y = env[k.rhs]
+        dx = np.asarray(block_density(x, (bm, bk)))
+        dy = np.asarray(block_density(y, (bk, bn)))
+        codes, _ = analyzer.plan_kernel_host(
+            self.strategy, dx, dy, k.block_dims, self.model,
+            kernel_type=k.kernel_type)
+        out = self._blocked_matmul(x, y, codes, (bm, bk, bn))
+        if k.epilogue_add is not None:
+            out = out + env[k.epilogue_add] * k.epilogue_scale
+        if k.activation_enabled:
+            if k.activation == Activation.RELU:
+                out = jax.nn.relu(out)
+            elif k.activation == Activation.PRELU:
+                out = jnp.where(out >= 0, out, 0.25 * out)
+        return out
+
+    def _blocked_matmul(self, x, y, codes, block):
+        bm, bk, bn = block
+        m, n = x.shape[0], y.shape[1]
+        I, J, K = codes.shape
+        pm, pk_ = (-m) % bm, (-x.shape[1]) % bk
+        pn = (-n) % bn
+        xp = jnp.pad(x, ((0, pm), (0, pk_)))
+        yp = jnp.pad(y, ((0, pk_), (0, pn)))
+        rows = []
+        for i in range(I):
+            cols = []
+            for j in range(J):
+                acc = jnp.zeros((bm, bn), jnp.float32)
+                for t in range(K):
+                    if Primitive(int(codes[i, j, t])) == Primitive.SKIP:
+                        continue
+                    xblk = jax.lax.dynamic_slice(
+                        xp, (i * bm, t * bk), (bm, bk))
+                    yblk = jax.lax.dynamic_slice(
+                        yp, (t * bk, j * bn), (bk, bn))
+                    acc = acc + jnp.dot(xblk, yblk,
+                                        preferred_element_type=jnp.float32)
+                cols.append(acc)
+            rows.append(jnp.concatenate(cols, axis=1))
+        out = jnp.concatenate(rows, axis=0)
+        return out[:m, :n].astype(jnp.promote_types(x.dtype, y.dtype))
+
+
+def _time(fn, repeats: int) -> float:
+    fn()                                  # warm compile/dispatch caches
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(fast: bool = True) -> None:
+    models = ("gcn", "sage") if fast else ("gcn", "sage", "gin", "sgc")
+    datasets = ("CO",) if fast else ("CO", "CI")
+    scale = 0.12
+    repeats = 3
+    rows = []
+    for model in models:
+        for ds in datasets:
+            b = gnn_models.build_dense(model, ds, scale=scale, seed=0)
+            for strategy in ("dynamic", "s1", "s2", "gemm"):
+                eng = runtime.DynasparseEngine(strategy=strategy)
+                unified_s = _time(
+                    lambda: b.run(eng)[0], repeats)
+                seed_eng = SeedHostLoopEngine(strategy)
+                seed_s = _time(
+                    lambda: seed_eng.run(b.compiled, b.tensors), repeats)
+                speedup = seed_s / unified_s if unified_s > 0 else float("inf")
+                rows.append({
+                    "model": model, "dataset": ds, "strategy": strategy,
+                    "scale": scale,
+                    "seed_host_loop_s": seed_s,
+                    "unified_executor_s": unified_s,
+                    "speedup": speedup,
+                })
+                emit(f"engine.{model}.{ds}.{strategy}", unified_s * 1e6,
+                     f"seed={seed_s*1e6:.0f}us speedup={speedup:.1f}x")
+    gm = geomean(r["speedup"] for r in rows)
+    payload = {
+        "bench": "unified executor vs seed host-loop engine",
+        "device": jax.default_backend(),
+        "repeats": repeats,
+        "rows": rows,
+        "geomean_speedup": gm,
+    }
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("engine.geomean_speedup", 0.0, f"{gm:.2f}x -> {_OUT.name}")
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -1,22 +1,155 @@
-"""Runtime Analyzer: dynamic kernel-to-primitive mapping (Algorithm 7).
+"""Runtime Analyzer: kernel-to-primitive mapping for every strategy.
 
 For a computation task Z_ij = sum_t X_it @ Y_tj, the Analyzer fetches the
 densities of every partition pair and picks the target primitive (and buffer
 assignment, which on TPU becomes "which operand is the gathered/sparse one").
-Runs on the host in host-runtime mode (the soft processor role) and as traced
-jnp in fused mode.
+
+:func:`plan_codes` is THE planner: it produces the (I, J, K) primitive-code
+grid for all four mapping strategies (Section VIII-B) -- ``dynamic``
+(Algorithm 7, the contribution), ``s1`` (HyGCN/BoostGCN), ``s2`` (AWB-GCN),
+``gemm`` (dense lower bound) -- and is pure jnp, so the same code runs on the
+host (soft-processor role) and traced inside the jit-compiled unified
+executor (``core.dynasparse.dynasparse_matmul``).  See DESIGN.md section 1.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.perf_model import FPGACostModel, Primitive, TPUCostModel
+from repro.core.ir import KernelType
+from repro.core.perf_model import (FPGACostModel, Primitive, TPUCostModel,
+                                   _traced)
 
 CostModel = object  # FPGACostModel | TPUCostModel (duck-typed)
+
+STRATEGIES = ("dynamic", "s1", "s2", "gemm")
+
+
+def static_primitive(strategy: str,
+                     kernel_type: Optional[KernelType]) -> Primitive:
+    """The fixed primitive of a static strategy (s1/s2/gemm)."""
+    if strategy == "s1":
+        if kernel_type is None:
+            raise ValueError("strategy 's1' maps by kernel type; pass one")
+        return (Primitive.SPDMM if kernel_type == KernelType.AGGREGATE
+                else Primitive.GEMM)
+    if strategy == "s2":
+        return Primitive.SPDMM
+    if strategy == "gemm":
+        return Primitive.GEMM
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def plan_codes(
+    strategy: str,
+    dens_x: jnp.ndarray,          # (I, K) block densities of X
+    dens_y: jnp.ndarray,          # (K, J) block densities of Y
+    model: CostModel,
+    *,
+    kernel_type: Optional[KernelType] = None,
+) -> jnp.ndarray:
+    """K2P decision grid: (I, K) x (K, J) -> (I, J, K) int32 Primitive codes.
+
+    The single source of truth for every strategy.  ``strategy`` and
+    ``kernel_type`` are trace-static; the densities may be host numpy or
+    traced jnp -- under jit this is the paper's Analyzer fused into the
+    executor, on the host it is the soft processor's decision loop
+    (vectorized).
+    """
+    I, K = dens_x.shape[0], dens_x.shape[1]
+    J = dens_y.shape[1]
+    if strategy != "dynamic":
+        # static mappings ignore the densities: constant grid, no broadcast
+        # (and no device work on the host path).
+        prim = static_primitive(strategy, kernel_type)
+        xp = jnp if _traced(dens_x, dens_y) else np
+        return xp.full((I, J, K), int(prim), xp.int32)
+    ax = jnp.asarray(dens_x)[:, None, :]                    # (I, 1, K)
+    ay = jnp.swapaxes(jnp.asarray(dens_y), 0, 1)[None]      # (1, J, K)
+    ax, ay = jnp.broadcast_arrays(ax, ay)
+    return model.select_traced(ax, ay)
+
+
+def task_costs(
+    codes: jnp.ndarray,           # (I, J, K) int32 Primitive codes
+    dens_x: jnp.ndarray,          # (I, K)
+    dens_y: jnp.ndarray,          # (K, J)
+    block_dims: Tuple[int, int, int],
+    model: CostModel,
+) -> jnp.ndarray:
+    """Per-task predicted cost (I, J): Table IV cost summed over the K
+    reduction steps under each step's selected primitive.  Feeds Algorithm 8
+    scheduling and Fig. 13 overhead.  Backend-matching: pure numpy on host
+    inputs (the engine's bookkeeping path), jnp under trace."""
+    bm, bk, bn = block_dims
+    xp = jnp if _traced(codes, dens_x, dens_y) else np
+    ax = xp.asarray(dens_x, dtype=xp.float64 if xp is np else jnp.float32)
+    ay = xp.asarray(dens_y, dtype=ax.dtype)
+    ax = ax[:, None, :]                                     # (I, 1, K)
+    ay = xp.swapaxes(ay, 0, 1)[None]                        # (1, J, K)
+    ax, ay = xp.broadcast_arrays(ax, ay)
+    step = xp.where(
+        codes == Primitive.GEMM,
+        model.cycles(Primitive.GEMM, bm, bk, bn, ax, ay),
+        xp.where(
+            codes == Primitive.SPDMM,
+            model.cycles(Primitive.SPDMM, bm, bk, bn, ax, ay),
+            xp.where(
+                codes == Primitive.SPMM,
+                model.cycles(Primitive.SPMM, bm, bk, bn, ax, ay),
+                0.0)))
+    return step.sum(axis=2)
+
+
+def task_costs_host(
+    codes: np.ndarray,
+    dens_x: np.ndarray,
+    dens_y: np.ndarray,
+    block_dims: Tuple[int, int, int],
+    model: CostModel,
+    *,
+    chunk_elems: float = 2e6,
+) -> np.ndarray:
+    """Chunked :func:`task_costs` for host grids (bounds broadcast temps)."""
+    I, J, K = codes.shape
+    costs = np.empty((I, J), np.float64)
+    chunk = max(1, int(chunk_elems / max(J * K, 1)))
+    for i0 in range(0, I, chunk):
+        i1 = min(i0 + chunk, I)
+        costs[i0:i1] = task_costs(codes[i0:i1], dens_x[i0:i1], dens_y,
+                                  block_dims, model)
+    return costs
+
+
+def plan_kernel_host(
+    strategy: str,
+    dens_x: np.ndarray,
+    dens_y: np.ndarray,
+    block_dims: Tuple[int, int, int],
+    model: CostModel,
+    *,
+    kernel_type: Optional[KernelType] = None,
+    chunk_elems: float = 2e6,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side planning for one kernel: (codes (I,J,K), costs (I,J)) np.
+
+    Chunks over output rows: NELL-sized decision grids (I*J*K ~ 1e7+) would
+    otherwise materialize multi-GB broadcast temporaries."""
+    I, K = dens_x.shape
+    J = dens_y.shape[1]
+    codes = np.empty((I, J, K), np.int32)
+    costs = np.empty((I, J), np.float64)
+    chunk = max(1, int(chunk_elems / max(J * K, 1)))
+    for i0 in range(0, I, chunk):
+        i1 = min(i0 + chunk, I)
+        c = np.asarray(plan_codes(strategy, dens_x[i0:i1], dens_y, model,
+                                  kernel_type=kernel_type))
+        codes[i0:i1] = c
+        costs[i0:i1] = task_costs(c, dens_x[i0:i1], dens_y, block_dims, model)
+    return codes, costs
 
 
 @dataclasses.dataclass
@@ -78,14 +211,8 @@ def plan_kernel(
 
 
 def plan_kernel_traced(model, dens_x: jnp.ndarray, dens_y: jnp.ndarray) -> jnp.ndarray:
-    """Traced K2P: (I, K) x (K, J) -> (I, J, K) int32 primitive codes.
-
-    Used by fused-mode dynasparse_matmul inside jit.
-    """
-    ax = dens_x[:, None, :]            # (I, 1, K)
-    ay = jnp.swapaxes(dens_y, 0, 1)[None, :, :]  # (1, J, K)
-    ax, ay = jnp.broadcast_arrays(ax, ay)
-    return model.select_traced(ax, ay)
+    """Traced dynamic-strategy K2P (back-compat alias of :func:`plan_codes`)."""
+    return plan_codes("dynamic", dens_x, dens_y, model)
 
 
 def primitive_histogram(plans: List[TaskPlan]) -> np.ndarray:

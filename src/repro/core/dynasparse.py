@@ -1,19 +1,30 @@
-"""Fused-mode dynasparse matmul: dynamic K2P dispatch inside one ``jit``.
+"""The unified Dynasparse executor: profile -> plan -> dispatch in one ``jit``.
 
-This is the form of the paper's mechanism that can live INSIDE a compiled
-train/serve step, where a host round-trip per layer (the soft-processor loop
-of ``core.runtime``) is unacceptable.  The whole pipeline --
+This is the single execution path for the paper's mechanism -- both the
+GNN engine (``core.runtime.DynasparseEngine``) and the LM layers
+(``models.layers``) run every kernel through it.  The whole pipeline --
 
-    profile block densities  ->  Algorithm 7 (traced)  ->  per-task
-    ``lax.switch`` over primitive branches inside a ``lax.scan`` task loop
+    profile block densities  ->  plan_codes (any strategy, traced)  ->
+    per-task ``lax.switch`` over primitive branches inside a ``lax.scan``
+    task loop  ->  fused epilogue (residual + scale + activation)  ->
+    result block-density profile fused at writeback
 
--- is traced once; at runtime ``lax.switch`` executes ONLY the selected
-branch, so an all-zero block pair costs no MACs (SKIP branch), which is real
-data-dependent work elision under XLA's static shapes.  With
-``use_kernels=True`` the non-dense branches call the Pallas block-sparse
-kernels, whose clamped-index masked loops additionally scale *within-block*
-cost by tile density (the TPU-granularity analogue of the FPGA's
-element-granularity skipping; see DESIGN.md section 2).
+-- is traced once per (shapes, block, strategy, epilogue) signature; at
+runtime ``lax.switch`` executes ONLY the selected branch, so an all-zero
+block pair costs no MACs (SKIP branch), which is real data-dependent work
+elision under XLA's static shapes.  With ``use_kernels=True`` the non-dense
+branches call the Pallas block-sparse kernels, whose clamped-index masked
+loops additionally scale *within-block* cost by tile density (the
+TPU-granularity analogue of the FPGA's element-granularity skipping; see
+DESIGN.md section 2).
+
+The planner can also be bypassed: pass precomputed ``codes`` (e.g. planned
+from layer l's writeback density profile while layer l executes -- the
+paper's K2P/execution overlap, Section V-B2) and the executor dispatches
+them verbatim.  The ``out_density`` side output is what feeds that
+next-layer plan: it is computed from the value being written anyway, so XLA
+fuses the counting into the producing kernel (the FPGA's comparator array at
+the Result Buffer port).
 
 The scan-over-tasks structure mirrors Algorithm 8: each scan step is one
 "task" (an output partition); on a real mesh the task loop is sharded over
@@ -28,7 +39,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import profiler
+from repro.core import analyzer, profiler
+from repro.core.ir import KernelType
 from repro.core.perf_model import FPGACostModel, Primitive, TPUCostModel
 from repro.kernels import ops
 
@@ -39,11 +51,12 @@ class DynasparseResult:
     codes: jnp.ndarray          # (I, J, K) int32 Primitive per reduction step
     dens_x: jnp.ndarray         # (I, K) block densities of X
     dens_y: jnp.ndarray         # (K, J) block densities of Y
+    out_density: jnp.ndarray    # block densities of the (post-epilogue) result
 
 
 jax.tree_util.register_pytree_node(
     DynasparseResult,
-    lambda r: ((r.out, r.codes, r.dens_x, r.dens_y), None),
+    lambda r: ((r.out, r.codes, r.dens_x, r.dens_y, r.out_density), None),
     lambda _, leaves: DynasparseResult(*leaves),
 )
 
@@ -58,24 +71,51 @@ def _block_tensor(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
     return x.reshape(mb, bm, nb, bn).transpose(0, 2, 1, 3)
 
 
+def _blocked_density(xb: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Per-block density of a blocked tensor -- same normalization as
+    ``profiler.block_density``, so the traced planner sees the same numbers
+    as the host planner/simulator on ragged edge blocks."""
+    counts = jnp.sum(xb != 0, axis=(2, 3))
+    return profiler.density_from_counts(counts, m, n,
+                                        xb.shape[2], xb.shape[3])
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block", "cost_model", "use_kernels", "tile", "unroll"))
+    static_argnames=("strategy", "kernel_type", "epilogue_scale",
+                     "activation", "out_block", "block", "cost_model",
+                     "use_kernels", "tile", "unroll"))
 def dynasparse_matmul(
     x: jnp.ndarray,
     y: jnp.ndarray,
     *,
+    codes: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+    strategy: str = "dynamic",
+    kernel_type: Optional[KernelType] = None,
+    epilogue_scale: float = 1.0,
+    activation: str = "none",
+    out_block: Optional[Tuple[int, int]] = None,
     block: Tuple[int, int, int] = (128, 128, 128),
     cost_model=FPGACostModel(),
     use_kernels: bool = False,
     tile: Tuple[int, int] = (128, 128),
     unroll: int = 1,
 ) -> DynasparseResult:
-    """``x @ y`` with per-(partition pair) dynamic primitive dispatch.
+    """``x @ y`` with per-(partition pair) primitive dispatch + fused epilogue.
 
     block = (bm, bk, bn): X is partitioned (bm x bk), Y (bk x bn) -- the
-    paper's N1/N2 partitions.  ``cost_model.select_traced`` supplies the K2P
-    rule (FPGA Table IV rule or the TPU tile-density rule).
+    paper's N1/N2 partitions.  ``strategy`` picks the K2P rule: ``dynamic``
+    runs Algorithm 7 through ``cost_model.select_traced`` (Table IV rule or
+    the TPU tile-density rule); ``s1``/``s2``/``gemm`` are the static
+    baselines (``s1`` needs ``kernel_type``).  Precomputed ``codes`` (from a
+    previous layer's profile) override the in-trace planner.
+
+    Epilogue (fused at writeback, matching ``KernelIR``):
+    ``out += residual * epilogue_scale`` then ``activation``
+    (none/relu/prelu).  ``out_density`` profiles the final result at
+    ``out_block`` granularity (defaults to (bm, bn)) for planning the next
+    kernel while this one executes.
     """
     m, n = x.shape[0], y.shape[1]
     bm, bk, bn = block
@@ -84,12 +124,15 @@ def dynasparse_matmul(
     I, K = xb.shape[:2]
     J = yb.shape[1]
 
-    dens_x = jnp.mean(xb != 0, axis=(2, 3))  # (I, K)
-    dens_y = jnp.mean(yb != 0, axis=(2, 3))  # (K, J)
-    codes = cost_model.select_traced(
-        dens_x[:, None, :], jnp.swapaxes(dens_y, 0, 1)[None, :, :])  # (I,J,K)
+    dens_x = _blocked_density(xb, x.shape[0], x.shape[1])   # (I, K)
+    dens_y = _blocked_density(yb, y.shape[0], y.shape[1])   # (K, J)
+    if codes is None:
+        codes = analyzer.plan_codes(strategy, dens_x, dens_y, cost_model,
+                                    kernel_type=kernel_type)
 
     out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    if residual is not None:
+        out_dtype = jnp.promote_types(out_dtype, residual.dtype)
 
     def _skip(acc, xk, yk):
         del xk, yk
@@ -133,7 +176,23 @@ def dynasparse_matmul(
     _, blocks = jax.lax.scan(task, None, jnp.arange(I * J))
     out = blocks.reshape(I, J, bm, bn).transpose(0, 2, 1, 3)
     out = out.reshape(I * bm, J * bn)[:m, :n]
-    return DynasparseResult(out, codes, dens_x, dens_y)
+
+    # --- fused epilogue (the FPGA applies these on the writeback path) ---
+    if residual is not None:
+        out = out + (residual if epilogue_scale == 1.0
+                     else residual * epilogue_scale)
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation == "prelu":
+        out = jnp.where(out >= 0, out, 0.25 * out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+
+    # --- Sparsity Profiler fused at writeback (Section V-B2) ---
+    ob = out_block or (bm, bn)
+    out_density = profiler.block_density(out, ob)
+    return DynasparseResult(out.astype(out_dtype), codes, dens_x, dens_y,
+                            out_density)
 
 
 def dynasparse_dense_equivalent(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

@@ -79,6 +79,18 @@ class KernelIR:
         return (self.n_vertices, self.f_in, self.f_out)
 
     @property
+    def block_dims(self) -> Tuple[int, int, int]:
+        """(bm, bk, bn) partition dims of one task's matmul steps.
+
+        Aggregate (Alg. 2): A blocks N1xN1 x H fibers N1xN2 -> out N1xN2.
+        Update   (Alg. 3): H subfibers N2xN2 x W blocks N2xN2 -> out N2xN2.
+        """
+        s = self.scheme
+        if self.kernel_type == KernelType.AGGREGATE:
+            return (s.n1, s.n1, s.n2)
+        return (s.n2, s.n2, s.n2)
+
+    @property
     def workload(self) -> int:
         """Q in Algorithm 9: |V| * f for the kernel's output."""
         m, _, d = self.matmul_dims

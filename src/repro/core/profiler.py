@@ -25,6 +25,19 @@ def element_density(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.count_nonzero(x) / x.size
 
 
+def density_from_counts(counts: jnp.ndarray, m: int, n: int,
+                        bm: int, bn: int) -> jnp.ndarray:
+    """(Mb, Nb) nonzero counts -> densities relative to the *unpadded*
+    elements actually inside each block.  The single normalization rule
+    shared by the host profiler and the traced executor (their parity on
+    ragged edge blocks is a tested contract)."""
+    mb, nb = counts.shape
+    rows_in = jnp.clip(m - jnp.arange(mb) * bm, 0, bm)
+    cols_in = jnp.clip(n - jnp.arange(nb) * bn, 0, bn)
+    sizes = rows_in[:, None] * cols_in[None, :]
+    return counts / jnp.maximum(sizes, 1)
+
+
 def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
     """Per-block element density.  (M, N) -> (Mb, Nb) in [0, 1].
 
@@ -39,11 +52,7 @@ def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
     mb, nb = x.shape[0] // bm, x.shape[1] // bn
     nz = (x != 0).reshape(mb, bm, nb, bn)
     counts = jnp.sum(nz, axis=(1, 3))
-    # density relative to the *unpadded* elements actually inside each block
-    rows_in = jnp.clip(m - jnp.arange(mb) * bm, 0, bm)
-    cols_in = jnp.clip(n - jnp.arange(nb) * bn, 0, bn)
-    sizes = rows_in[:, None] * cols_in[None, :]
-    return counts / jnp.maximum(sizes, 1)
+    return density_from_counts(counts, m, n, bm, bn)
 
 
 def tile_occupancy(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:

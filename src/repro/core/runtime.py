@@ -3,12 +3,16 @@
 Two entry points:
 
 * :class:`DynasparseEngine` -- executes a compiled GNN (IR from
-  ``core.compiler``) with REAL numerics: per kernel it profiles block
-  densities, runs the Analyzer (Algorithm 7 or a static strategy), schedules
-  tasks over the Computation Cores (Algorithm 8), and dispatches each
-  reduction step to the selected primitive.  The Python host plays the
-  MicroBlaze's role; JAX's async dispatch gives the paper's "K2P of kernel
-  l+1 overlaps execution of kernel l" for free.
+  ``core.compiler``) with REAL numerics.  Every kernel runs as ONE traced,
+  jit-compiled call through the unified executor
+  (``core.dynasparse.dynasparse_matmul``): the executor profiles block
+  densities, runs the Analyzer (``analyzer.plan_codes`` -- Algorithm 7 or a
+  static strategy) and dispatches every reduction step to its primitive
+  inside the same XLA program.  The Python host plays the MicroBlaze's role
+  for bookkeeping only (Alg. 8 makespan, histograms, reports); compiled
+  executables are cached per (shapes, block, strategy, epilogue) signature,
+  so repeated kernels/layers re-launch without re-tracing.  See DESIGN.md
+  section 1.
 
 * :func:`simulate_inference` -- pure cost-model execution (no numerics):
   given per-tensor density statistics it produces the predicted latency of a
@@ -18,7 +22,7 @@ Two entry points:
   latency derives from its Table IV model + measured densities + Alg. 8
   load balance.
 
-Strategies (Section VIII-B):
+Strategies (Section VIII-B; the K2P rules live in ``analyzer.plan_codes``):
   dynamic -- Algorithm 7 (the contribution)
   s1      -- HyGCN/BoostGCN: Aggregate->SpDMM, Update->GEMM
   s2      -- AWB-GCN: everything->SpDMM
@@ -27,40 +31,24 @@ Strategies (Section VIII-B):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analyzer, scheduler
 from repro.core.compiler import CompiledModel
+from repro.core.dynasparse import DynasparseResult, dynasparse_matmul
 from repro.core.ir import Activation, AggOp, KernelIR, KernelType
-from repro.core.perf_model import (FPGACostModel, Primitive,
-                                   predict_output_density)
-from repro.core.profiler import SparsityStats, block_density
-from repro.kernels import ops
+from repro.core.perf_model import FPGACostModel
+from repro.core.profiler import SparsityStats
 
 # instructions the soft processor spends per K2P decision (Alg. 7 is a few
 # compares + buffer assignment); 500 MIPS MicroBlaze (Section VII).
 _K2P_INSTRUCTIONS = 32
 _SOFT_PROC_IPS = 500e6
-
-
-def strategy_primitive(strategy: str, kernel: KernelIR, a_x: float,
-                       a_y: float, model) -> Primitive:
-    """Map one partition pair under a named strategy."""
-    if strategy == "dynamic":
-        return model.select(a_x, a_y)
-    if strategy == "s1":
-        return (Primitive.SPDMM if kernel.kernel_type == KernelType.AGGREGATE
-                else Primitive.GEMM)
-    if strategy == "s2":
-        return Primitive.SPDMM
-    if strategy == "gemm":
-        return Primitive.GEMM
-    raise ValueError(f"unknown strategy {strategy!r}")
 
 
 @dataclasses.dataclass
@@ -71,7 +59,13 @@ class KernelReport:
     makespan_cycles: float           # predicted, after Alg. 8 scheduling
     utilization: float
     k2p_seconds: float               # modeled soft-processor time
+    # measured host Analyzer-bookkeeping wall time (cost prediction + Alg. 8
+    # scheduling + histogram).  The K2P decisions themselves execute inside
+    # the jitted executable; their soft-processor cost is k2p_seconds.
+    k2p_wall_seconds: float = 0.0
     wall_seconds: float = 0.0        # host wall clock (real-exec mode only)
+    dens_x: Optional[np.ndarray] = None   # (I, K) profiled lhs densities
+    dens_y: Optional[np.ndarray] = None   # (K, J) profiled rhs densities
 
 
 @dataclasses.dataclass
@@ -91,72 +85,16 @@ class InferenceReport:
         return float(sum(k.k2p_seconds for k in self.kernels))
 
     @property
+    def k2p_wall_seconds(self) -> float:
+        return float(sum(k.k2p_wall_seconds for k in self.kernels))
+
+    @property
+    def wall_seconds(self) -> float:
+        return float(sum(k.wall_seconds for k in self.kernels))
+
+    @property
     def histogram(self) -> np.ndarray:
         return np.sum([k.histogram for k in self.kernels], axis=0)
-
-
-def kernel_block_dims(kernel: KernelIR) -> Tuple[int, int, int]:
-    """(bm, bk, bn) partition dims of one task's matmul steps.
-
-    Aggregate (Alg. 2): A blocks N1xN1 x H fibers N1xN2 -> out N1xN2.
-    Update   (Alg. 3): H subfibers N2xN2 x W blocks N2xN2 -> out N2xN2.
-    """
-    s = kernel.scheme
-    if kernel.kernel_type == KernelType.AGGREGATE:
-        return (s.n1, s.n1, s.n2)
-    return (s.n2, s.n2, s.n2)
-
-
-def _plan_kernel(kernel: KernelIR, dens_x: np.ndarray, dens_y: np.ndarray,
-                 strategy: str, model) -> Tuple[np.ndarray, np.ndarray]:
-    """K2P codes + per-task predicted cost for all tasks of one kernel.
-
-    dens_x: (I, K) block densities of the lhs; dens_y: (K, J) of the rhs.
-    Vectorized over the whole (I, J, K) decision grid (the soft processor
-    does this serially; a few np ops keep the benchmark harness fast).
-    """
-    bm, bk, bn = kernel_block_dims(kernel)
-    I, K = dens_x.shape
-    J = dens_y.shape[1]
-    codes = np.empty((I, J, K), np.int32)
-    costs = np.empty((I, J), np.float64)
-    # chunk over output rows: NELL-sized decision grids (I*J*K ~ 1e7+) would
-    # otherwise materialize multi-GB temporaries.
-    chunk = max(1, int(2e6 / max(J * K, 1)))
-    for i0 in range(0, I, chunk):
-        i1 = min(i0 + chunk, I)
-        ax = np.broadcast_to(dens_x[i0:i1, None, :],
-                             (i1 - i0, J, K)).astype(np.float64)
-        ay = np.broadcast_to(dens_y.T[None, :, :],
-                             (i1 - i0, J, K)).astype(np.float64)
-        if strategy == "dynamic":
-            c = np.asarray(model.select_traced(jnp.asarray(ax),
-                                               jnp.asarray(ay)), np.int32)
-        elif strategy == "s1":
-            p = (Primitive.SPDMM
-                 if kernel.kernel_type == KernelType.AGGREGATE
-                 else Primitive.GEMM)
-            c = np.full(ax.shape, int(p), np.int32)
-        elif strategy == "s2":
-            c = np.full(ax.shape, int(Primitive.SPDMM), np.int32)
-        elif strategy == "gemm":
-            c = np.full(ax.shape, int(Primitive.GEMM), np.int32)
-        else:
-            raise ValueError(f"unknown strategy {strategy!r}")
-        step = np.where(
-            c == Primitive.GEMM,
-            np.asarray(model.cycles(Primitive.GEMM, bm, bk, bn, ax, ay)),
-            np.where(
-                c == Primitive.SPDMM,
-                np.asarray(model.cycles(Primitive.SPDMM, bm, bk, bn, ax, ay)),
-                np.where(
-                    c == Primitive.SPMM,
-                    np.asarray(model.cycles(Primitive.SPMM, bm, bk, bn,
-                                            ax, ay)),
-                    0.0)))
-        codes[i0:i1] = c
-        costs[i0:i1] = step.sum(axis=2)
-    return codes, costs
 
 
 def _k2p_model_seconds(num_decisions: int) -> float:
@@ -184,7 +122,7 @@ def propagate_stats(
     env = dict(static_stats)
     for k in compiled.graph.topo_order():
         dx, dy = _operand_block_densities(k, env)
-        _, bk, _ = kernel_block_dims(k)
+        _, bk, _ = k.block_dims
         # out block (i, j): 1 - prod_k (1 - dx[i,k] dy[k,j])^bk
         log_stay = np.zeros((dx.shape[0], dy.shape[1]))
         for kk in range(dx.shape[1]):
@@ -252,7 +190,9 @@ def simulate_inference(
     reports = []
     for k in compiled.graph.topo_order():
         dx, dy = _operand_block_densities(k, stats_env)
-        codes, costs = _plan_kernel(k, dx, dy, strategy, model)
+        codes, costs = analyzer.plan_kernel_host(
+            strategy, dx, dy, k.block_dims, model,
+            kernel_type=k.kernel_type)
         sched = scheduler.schedule_dynamic(costs.reshape(-1), n_cc)
         hist = np.bincount(codes.reshape(-1), minlength=4).astype(np.int64)
         reports.append(KernelReport(
@@ -263,30 +203,50 @@ def simulate_inference(
 
 
 # ---------------------------------------------------------------------------
-# Real-numerics engine (small graphs; validates that dispatch preserves math).
+# Real-numerics engine: one jit-compiled executor call per kernel.
 # ---------------------------------------------------------------------------
 
 _AGG_PRE = {AggOp.SUM: "A", AggOp.MEAN: "A_mean"}
 
 
 class DynasparseEngine:
-    """Executes a compiled GNN with per-partition primitive dispatch."""
+    """Executes a compiled GNN through the unified jit-compiled executor.
+
+    Per kernel: one cached executable (profile -> plan -> dispatch -> fused
+    epilogue, all inside a single XLA program); the host derives the
+    ``KernelReport`` bookkeeping (primitive histogram, Alg. 8 makespan,
+    modeled + measured K2P time) from the planner's codes, which the
+    executor returns as side outputs.  The result's block-density profile
+    (fused at writeback) is kept in ``profiled_densities`` so layer l+1 can
+    be planned while layer l executes.
+    """
 
     def __init__(self, *, strategy: str = "dynamic",
                  model: Optional[FPGACostModel] = None,
                  n_cc: Optional[int] = None,
                  use_kernels: bool = False,
-                 tile: Tuple[int, int] = (16, 16)):
+                 tile: Tuple[int, int] = (16, 16),
+                 unroll: int = 1):
         self.strategy = strategy
         self.model = model or FPGACostModel()
         self.n_cc = n_cc
         self.use_kernels = use_kernels
         self.tile = tile
+        self.unroll = unroll
+        # executable cache: signature -> partial-applied jitted executor.
+        # jax.jit has its own global trace cache; this local cache makes the
+        # hit/miss behavior observable (tests, benchmarks) and keeps key
+        # hashing in one place.
+        self._executors: Dict[tuple, functools.partial] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.profiled_densities: Dict[str, jnp.ndarray] = {}
 
     def run(self, compiled: CompiledModel, tensors: Dict[str, jnp.ndarray]
             ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
         env = dict(tensors)
         n_cc = self.n_cc or compiled.partition.n_cc
+        self.profiled_densities = {}
         reports: List[KernelReport] = []
         for k in compiled.graph.topo_order():
             t0 = time.perf_counter()
@@ -296,10 +256,41 @@ class DynasparseEngine:
             reports.append(rep)
         return env, InferenceReport(reports, self.strategy)
 
+    # -- executor cache -----------------------------------------------------
+    def _executor(self, k: KernelIR, x: jnp.ndarray, y: jnp.ndarray,
+                  has_residual: bool) -> functools.partial:
+        activation = (k.activation.value if k.activation_enabled else "none")
+        scale = k.epilogue_scale if has_residual else 1.0
+        key = (k.kernel_type, k.block_dims, x.shape, str(x.dtype),
+               y.shape, str(y.dtype), self.strategy, has_residual,
+               scale, activation)
+        fn = self._executors.get(key)
+        if fn is not None:
+            self.cache_hits += 1
+            return fn
+        self.cache_misses += 1
+        n2 = k.scheme.n2
+        fn = functools.partial(
+            dynasparse_matmul,
+            strategy=self.strategy,
+            kernel_type=k.kernel_type,
+            epilogue_scale=scale,
+            activation=activation,
+            # feature stats live at (N2, N2) repo-wide; an Aggregate
+            # consumer mean-pools row blocks to N1 (see _pool_rows /
+            # _operand_block_densities), exact for element densities.
+            out_block=(n2, n2),
+            block=k.block_dims,
+            cost_model=self.model,
+            use_kernels=self.use_kernels,
+            tile=self.tile,
+            unroll=self.unroll)
+        self._executors[key] = fn
+        return fn
+
     # -- one kernel ---------------------------------------------------------
     def _run_kernel(self, k: KernelIR, env: Dict[str, jnp.ndarray],
                     n_cc: int) -> Tuple[jnp.ndarray, KernelReport]:
-        bm, bk, bn = kernel_block_dims(k)
         if k.kernel_type == KernelType.AGGREGATE:
             lhs_name = _AGG_PRE.get(k.agg_op)
             if lhs_name is None:
@@ -309,62 +300,27 @@ class DynasparseEngine:
         else:
             x = env[k.lhs]
         y = env[k.rhs]
-        # --- profile (the accelerator's Sparsity Profiler) ---
+        residual = env[k.epilogue_add] if k.epilogue_add is not None else None
+
+        # --- one traced call: profile -> plan -> dispatch -> epilogue ---
+        fn = self._executor(k, x, y, residual is not None)
+        res: DynasparseResult = fn(x, y, residual=residual)
+        self.profiled_densities[k.out] = res.out_density
+
+        # --- host bookkeeping from the planner's codes (side outputs) ---
+        codes = np.asarray(res.codes)
+        dx = np.asarray(res.dens_x)
+        dy = np.asarray(res.dens_y)
         t_plan = time.perf_counter()
-        dx = np.asarray(block_density(x, (bm, bk)))
-        dy = np.asarray(block_density(y, (bk, bn)))
-        codes, costs = _plan_kernel(k, dx, dy, self.strategy, self.model)
-        k2p_wall = time.perf_counter() - t_plan
+        costs = analyzer.task_costs_host(
+            codes, dx, dy, k.block_dims, self.model)
         sched = scheduler.schedule_dynamic(costs.reshape(-1), n_cc)
-
-        # --- execute tasks (blocked matmul with per-step dispatch) ---
-        out = self._blocked_matmul(x, y, codes, (bm, bk, bn))
-        out = self._epilogue(k, out, env)
-
         hist = np.bincount(codes.reshape(-1), minlength=4).astype(np.int64)
+        k2p_wall = time.perf_counter() - t_plan
+
         rep = KernelReport(
             name=k.name, num_tasks=int(costs.size), histogram=hist,
             makespan_cycles=sched.makespan, utilization=sched.utilization,
-            k2p_seconds=max(_k2p_model_seconds(codes.size), k2p_wall * 0.0))
-        return out, rep
-
-    def _blocked_matmul(self, x, y, codes, block) -> jnp.ndarray:
-        bm, bk, bn = block
-        m, n = x.shape[0], y.shape[1]
-        I, J, K = codes.shape
-        pm, pk_ = (-m) % bm, (-x.shape[1]) % bk
-        pn = (-n) % bn
-        xp = jnp.pad(x, ((0, pm), (0, pk_)))
-        yp = jnp.pad(y, ((0, pk_), (0, pn)))
-        rows = []
-        for i in range(I):
-            cols = []
-            for j in range(J):
-                acc = jnp.zeros((bm, bn), jnp.float32)
-                for t in range(K):
-                    prim = Primitive(int(codes[i, j, t]))
-                    if prim == Primitive.SKIP:
-                        continue
-                    xblk = jax.lax.dynamic_slice(xp, (i * bm, t * bk), (bm, bk))
-                    yblk = jax.lax.dynamic_slice(yp, (t * bk, j * bn), (bk, bn))
-                    if self.use_kernels:
-                        acc = acc + ops.matmul(xblk, yblk, prim,
-                                               tile=self.tile).astype(jnp.float32)
-                    else:
-                        acc = acc + jnp.dot(xblk, yblk,
-                                            preferred_element_type=jnp.float32)
-                cols.append(acc)
-            rows.append(jnp.concatenate(cols, axis=1))
-        out = jnp.concatenate(rows, axis=0)
-        return out[:m, :n].astype(jnp.promote_types(x.dtype, y.dtype))
-
-    def _epilogue(self, k: KernelIR, out, env) -> jnp.ndarray:
-        if k.epilogue_add is not None:
-            out = out * 1.0 + env[k.epilogue_add] * k.epilogue_scale \
-                if k.epilogue_scale != 1.0 else out + env[k.epilogue_add]
-        if k.activation_enabled:
-            if k.activation == Activation.RELU:
-                out = jax.nn.relu(out)
-            elif k.activation == Activation.PRELU:
-                out = jnp.where(out >= 0, out, 0.25 * out)
-        return out
+            k2p_seconds=_k2p_model_seconds(codes.size),
+            k2p_wall_seconds=k2p_wall, dens_x=dx, dens_y=dy)
+        return res.out, rep

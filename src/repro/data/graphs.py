@@ -18,11 +18,17 @@ Two granularities:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.profiler import SparsityStats
+
+
+def _name_seed(name: str, seed: int) -> int:
+    """Process-stable per-dataset seed (``hash(str)`` is salted per run)."""
+    return seed + zlib.crc32(name.encode()) % 65536
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +77,7 @@ def block_stats(name: str, n1: int, n2: int, *, seed: int = 0,
     mean (real feature matrices have hot/cold feature columns).
     """
     spec = TABLE_VI[name]
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    rng = np.random.default_rng(_name_seed(name, seed))
     gb = _ceil_div(spec.n_vertices, n1)
     r = _powerlaw_marginal(gb, rng)
     c = _powerlaw_marginal(gb, rng)
@@ -167,7 +173,7 @@ def materialize(name: str, *, scale: float = 1.0, seed: int = 0,
     v = min(int(spec.n_vertices * scale), max_vertices)
     e = max(int(spec.n_edges * (v / spec.n_vertices) ** 2), v)
     f = min(spec.f_in, max(32, int(spec.f_in * scale)))
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    rng = np.random.default_rng(_name_seed(name, seed))
     # power-law degree-weighted edge sampling with locality
     w = _powerlaw_marginal(v, rng)
     src = rng.choice(v, size=e, p=w)

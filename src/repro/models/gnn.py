@@ -54,9 +54,21 @@ class DenseGNN:
     tensors: Dict[str, jnp.ndarray]
     graph: graph_data.DenseGraph
 
-    def run(self, engine: Optional[runtime.DynasparseEngine] = None
+    def run(self, engine: Optional[runtime.DynasparseEngine] = None,
+            *, strategy: Optional[str] = None
             ) -> Tuple[jnp.ndarray, runtime.InferenceReport]:
-        engine = engine or runtime.DynasparseEngine()
+        """One inference through the unified jit-compiled executor.
+
+        Every kernel is a single traced call (executable cached across
+        ``run`` invocations of the same engine); pass ``strategy`` as a
+        shortcut for ``DynasparseEngine(strategy=...)``.
+        """
+        if engine is None:
+            engine = runtime.DynasparseEngine(strategy=strategy or "dynamic")
+        elif strategy is not None and strategy != engine.strategy:
+            raise ValueError(
+                f"strategy {strategy!r} conflicts with engine "
+                f"strategy {engine.strategy!r}")
         env, rep = engine.run(self.compiled, self.tensors)
         return env[self.compiled.graph.kernels[-1].out], rep
 

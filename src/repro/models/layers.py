@@ -81,12 +81,13 @@ def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray,
 
 def _linear(x: jnp.ndarray, w: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     """The Update-kernel analogue in the LM: optionally routed through the
-    dynasparse fused engine so pruned weights / sparse activations get
+    unified dynasparse executor so pruned weights / sparse activations get
     per-block primitive dispatch (paper's technique as a first-class LM
     feature).  Dense einsum otherwise (the dry-run/roofline path)."""
     if cfg.dynasparse_ffn:
         x2 = x.reshape(-1, x.shape[-1])
-        res = dynasparse_matmul(x2, w, block=(256, 256, 256),
+        res = dynasparse_matmul(x2, w, strategy="dynamic",
+                                block=(256, 256, 256),
                                 cost_model=TPUCostModel())
         return res.out.reshape(*x.shape[:-1], w.shape[-1])
     return jnp.einsum("...d,df->...f", x, w)

@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref
 

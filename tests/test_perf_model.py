@@ -1,7 +1,10 @@
 """Table IV / Algorithm 7 properties (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.perf_model import (FPGACostModel, Primitive, TPUCostModel,
                                    predict_output_density)
