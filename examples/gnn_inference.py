@@ -50,6 +50,20 @@ def main():
               for s in ("s1", "s2", "dynamic"))
     print(f"value preservation across strategies: max|err|={err:.2e}")
 
+    # whole model as ONE jit-compiled program: layer l+1's K2P plan chains
+    # from layer l's writeback density profile (DESIGN.md section 9)
+    fused = runtime.FusedModelExecutor(strategy="dynamic")
+    env, rep = fused.run(bundle.compiled, bundle.tensors)   # traces once
+    env, rep = fused.run(bundle.compiled, bundle.tensors)   # cached program
+    last = bundle.compiled.graph.kernels[-1].out
+    freq = hw.ALVEO_U250.freq_hz
+    print(f"fused    hist[SKIP,GEMM,SPDMM,SPMM]={rep.histogram} "
+          f"wall={rep.fused_wall_seconds*1e3:.2f}ms "
+          f"k2p-overlapped={rep.k2p_exposed_seconds(freq)*1e6:.1f}us "
+          f"(serial {rep.k2p_seconds*1e6:.1f}us) "
+          f"traces={fused.trace_count} "
+          f"bitwise==per-kernel: {np.array_equal(np.asarray(env[last]), outs['dynamic'])}")
+
     print("\n== full-scale Table VII row (cost-model simulation) ==")
     sim = gnn.build_sim(args.model, args.ds)
     lat = {s: sim.simulate(s).total_seconds(hw.ALVEO_U250.freq_hz) * 1e3

@@ -58,6 +58,19 @@ def plan_codes(
     traced jnp -- under jit this is the paper's Analyzer fused into the
     executor, on the host it is the soft processor's decision loop
     (vectorized).
+
+    Shape conventions: ``dens_x``/``dens_y`` are the operand block-density
+    grids AT THE KERNEL'S TASK GRANULARITY -- (I, K) for X partitioned
+    (bm, bk) and (K, J) for Y partitioned (bk, bn), normalized to the
+    unpadded elements per block (``profiler.density_from_counts``).
+    Feature-matrix profiles are stored at (N2, N2) repo-wide; callers
+    pooling them for an Aggregate's (N1, N2) fiber view use
+    ``profiler.BlockProfile.pool_rows`` (exact) or the simulator's
+    ``runtime._pool_rows`` (mean-pool).  Decision (i, j, k) maps the
+    reduction step X[i,k] @ Y[k,j]; ``strategy``: ``dynamic`` = Algorithm 7
+    via ``model.select_traced``, ``s1`` = SpDMM for Aggregate / GEMM for
+    Update (needs ``kernel_type``), ``s2`` = all SpDMM, ``gemm`` = all
+    dense.  Static strategies never emit SKIP.
     """
     I, K = dens_x.shape[0], dens_x.shape[1]
     J = dens_y.shape[1]
@@ -71,6 +84,37 @@ def plan_codes(
     ay = jnp.swapaxes(jnp.asarray(dens_y), 0, 1)[None]      # (1, J, K)
     ax, ay = jnp.broadcast_arrays(ax, ay)
     return model.select_traced(ax, ay)
+
+
+def plan_codes_from_profiles(
+    strategy: str,
+    prof_x,                       # profiler.BlockProfile at (bm, bk) blocks
+    prof_y,                       # profiler.BlockProfile at (bk, bn) blocks
+    model: CostModel,
+    *,
+    kernel_type: Optional[KernelType] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """K2P planning from PROPAGATED writeback profiles, not operands.
+
+    This is the layer-overlap entry point (paper Section V-B2): the fused
+    whole-model executor hands in each operand's ``profiler.BlockProfile``
+    -- either measured once for a graph input, or pooled from the producing
+    kernel's ``out_counts`` writeback profile -- already at this kernel's
+    consumer granularity.  Because the plan depends only on the producer's
+    profile (emitted at writeback) and never on the materialized operand,
+    XLA is free to schedule layer l+1's planning concurrently with layer
+    l's task loop, which is the soft-processor/accelerator overlap of the
+    paper realized inside one traced program.
+
+    Returns ``(codes, dens_x, dens_y)``: the (I, J, K) primitive grid plus
+    the densities it was planned from (the executor's side-output /
+    bookkeeping contract, bitwise equal to in-trace re-profiling).
+    """
+    dens_x = prof_x.densities()
+    dens_y = prof_y.densities()
+    codes = plan_codes(strategy, dens_x, dens_y, model,
+                       kernel_type=kernel_type)
+    return codes, dens_x, dens_y
 
 
 def task_costs(
@@ -208,11 +252,6 @@ def plan_kernel(
         for i in range(I)
         for j in range(J)
     ]
-
-
-def plan_kernel_traced(model, dens_x: jnp.ndarray, dens_y: jnp.ndarray) -> jnp.ndarray:
-    """Traced dynamic-strategy K2P (back-compat alias of :func:`plan_codes`)."""
-    return plan_codes("dynamic", dens_x, dens_y, model)
 
 
 def primitive_histogram(plans: List[TaskPlan]) -> np.ndarray:

@@ -52,11 +52,18 @@ class DynasparseResult:
     dens_x: jnp.ndarray         # (I, K) block densities of X
     dens_y: jnp.ndarray         # (K, J) block densities of Y
     out_density: jnp.ndarray    # block densities of the (post-epilogue) result
+    # nonzero COUNTS of the result at ``out_block`` granularity -- the exact,
+    # granularity-composable form of ``out_density`` that the fused
+    # whole-model executor chains into the next layer's planner
+    # (``profiler.BlockProfile``); integer sums pool bitwise-exactly across
+    # mismatched block schemes where mean-pooled densities would not.
+    out_counts: jnp.ndarray
 
 
 jax.tree_util.register_pytree_node(
     DynasparseResult,
-    lambda r: ((r.out, r.codes, r.dens_x, r.dens_y, r.out_density), None),
+    lambda r: ((r.out, r.codes, r.dens_x, r.dens_y, r.out_density,
+                r.out_counts), None),
     lambda _, leaves: DynasparseResult(*leaves),
 )
 
@@ -90,6 +97,8 @@ def dynasparse_matmul(
     y: jnp.ndarray,
     *,
     codes: Optional[jnp.ndarray] = None,
+    dens_x: Optional[jnp.ndarray] = None,
+    dens_y: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
     strategy: str = "dynamic",
     kernel_type: Optional[KernelType] = None,
@@ -108,14 +117,36 @@ def dynasparse_matmul(
     paper's N1/N2 partitions.  ``strategy`` picks the K2P rule: ``dynamic``
     runs Algorithm 7 through ``cost_model.select_traced`` (Table IV rule or
     the TPU tile-density rule); ``s1``/``s2``/``gemm`` are the static
-    baselines (``s1`` needs ``kernel_type``).  Precomputed ``codes`` (from a
-    previous layer's profile) override the in-trace planner.
+    baselines (``s1`` needs ``kernel_type``).
+
+    Planner bypasses (both are how the paper overlaps K2P with execution,
+    Section V-B2):
+
+    * ``codes`` -- a precomputed (I, J, K) int32 Primitive grid is dispatched
+      verbatim; the in-trace planner does not run.
+    * ``dens_x`` / ``dens_y`` -- precomputed operand block densities at the
+      CONSUMER granularity ((I, K) for X at (bm, bk) blocks, (K, J) for Y at
+      (bk, bn) blocks).  When given, the operand is NOT re-profiled: the
+      densities are planned from (if ``codes`` is None) and returned as the
+      result's ``dens_x``/``dens_y`` side outputs verbatim.  The fused
+      whole-model executor passes densities pooled from the producing
+      kernel's writeback profile here (``profiler.BlockProfile``), so layer
+      l+1's plan depends only on layer l's profile -- never on the
+      materialized operand.
 
     Epilogue (fused at writeback, matching ``KernelIR``):
     ``out += residual * epilogue_scale`` then ``activation``
-    (none/relu/prelu).  ``out_density`` profiles the final result at
-    ``out_block`` granularity (defaults to (bm, bn)) for planning the next
-    kernel while this one executes.
+    (none/relu/prelu).  ``out_density``/``out_counts`` profile the final
+    result at ``out_block`` granularity (defaults to (bm, bn)) for planning
+    the next kernel while this one executes.
+
+    ``use_kernels=True`` routes the GEMM/SpDMM/SPMM branches through the
+    Pallas block-sparse kernels (``repro.kernels.ops``) tiled
+    ``tile``/``unroll`` -- tile-granularity zero skipping on top of the
+    block-granularity SKIP; interpret mode off-TPU.  False keeps the XLA
+    dot path.  Value semantics are identical either way (the dispatch
+    NEVER changes the result, only the cost -- see
+    ``dynasparse_dense_equivalent``).
     """
     m, n = x.shape[0], y.shape[1]
     bm, bk, bn = block
@@ -124,8 +155,10 @@ def dynasparse_matmul(
     I, K = xb.shape[:2]
     J = yb.shape[1]
 
-    dens_x = _blocked_density(xb, x.shape[0], x.shape[1])   # (I, K)
-    dens_y = _blocked_density(yb, y.shape[0], y.shape[1])   # (K, J)
+    if dens_x is None:
+        dens_x = _blocked_density(xb, x.shape[0], x.shape[1])   # (I, K)
+    if dens_y is None:
+        dens_y = _blocked_density(yb, y.shape[0], y.shape[1])   # (K, J)
     if codes is None:
         codes = analyzer.plan_codes(strategy, dens_x, dens_y, cost_model,
                                     kernel_type=kernel_type)
@@ -190,9 +223,10 @@ def dynasparse_matmul(
 
     # --- Sparsity Profiler fused at writeback (Section V-B2) ---
     ob = out_block or (bm, bn)
-    out_density = profiler.block_density(out, ob)
+    out_counts = profiler.block_counts(out, ob)
+    out_density = profiler.density_from_counts(out_counts, m, n, *ob)
     return DynasparseResult(out.astype(out_dtype), codes, dens_x, dens_y,
-                            out_density)
+                            out_density, out_counts)
 
 
 def dynasparse_dense_equivalent(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

@@ -97,6 +97,29 @@ class KernelIR:
         return m * d
 
 
+@dataclasses.dataclass(frozen=True)
+class OperandFlow:
+    """Where one operand's block-density profile comes from (fused path).
+
+    The fused whole-model executor never re-profiles an intermediate: a
+    producing kernel emits its writeback profile at the repo-wide feature
+    granularity (N2, N2), and each consumer reads it pooled to its own
+    operand granularity.  This record is the per-kernel metadata that wires
+    that chain: which tensor the operand binds to, which kernel (if any)
+    produces it, the (rows, cols) block granularity this consumer plans at,
+    and the row-pool factor from the producer's (N2, N2) profile.
+
+    ``producer is None`` means a graph input (A / A_mean / H0 / weights):
+    the executor profiles it in-trace once per (tensor, granularity) and
+    caches the counts for every consumer.
+    """
+
+    source: str                      # IR tensor name the operand binds to
+    producer: Optional[int]          # kernel index writing it; None = input
+    block: Tuple[int, int]           # (rows, cols) consumer granularity
+    pool_rows: int                   # row-pool factor from (N2, N2) profile
+
+
 @dataclasses.dataclass
 class ComputationGraph:
     """Nodes = kernel IRs, edges = data dependencies (by tensor names)."""
@@ -118,6 +141,36 @@ class ComputationGraph:
                     out.append((produced[dep], i))
             produced[k.out] = i
         return out
+
+    def operand_flows(self) -> List[Tuple[OperandFlow, OperandFlow]]:
+        """Per-kernel (lhs_flow, rhs_flow): the density-propagation wiring.
+
+        Requires partitioning to have run (``scheme.n1``/``n2`` set).  For a
+        produced operand the consumer granularity must be a row-multiple of
+        the producer's (N2, N2) writeback profile with matching columns --
+        guaranteed by Algorithm 9 (N1 and N2 are power-of-two multiples of
+        the alignment with N1 >= N2) and asserted here so a future scheme
+        change fails loudly instead of silently mis-planning.
+        """
+        produced: Dict[str, int] = {}
+        flows: List[Tuple[OperandFlow, OperandFlow]] = []
+        for i, k in enumerate(self.kernels):
+            bm, bk, bn = k.block_dims
+            n2 = k.scheme.n2
+            pair = []
+            for name, blk in ((k.lhs, (bm, bk)), (k.rhs, (bk, bn))):
+                prod = produced.get(name)
+                pool = 1
+                if prod is not None:
+                    assert blk[1] == n2 and blk[0] % n2 == 0, (
+                        f"kernel {k.name}: operand {name} consumed at {blk} "
+                        f"cannot chain from the (N2={n2}, N2) profile")
+                    pool = blk[0] // n2
+                pair.append(OperandFlow(source=name, producer=prod,
+                                        block=blk, pool_rows=pool))
+            flows.append((pair[0], pair[1]))
+            produced[k.out] = i
+        return flows
 
     def __len__(self) -> int:
         return len(self.kernels)

@@ -38,11 +38,14 @@ def density_from_counts(counts: jnp.ndarray, m: int, n: int,
     return counts / jnp.maximum(sizes, 1)
 
 
-def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
-    """Per-block element density.  (M, N) -> (Mb, Nb) in [0, 1].
+def block_counts(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
+    """Per-block NONZERO COUNTS.  (M, N) -> (Mb, Nb) int32.
 
-    Blocks are the paper's data partitions (N1/N2 sized); the Analyzer makes
-    one K2P decision per partition pair from these numbers.
+    Counts are the exact, granularity-composable form of a block profile:
+    merging row blocks is a plain sum (zero-padded edge rows contribute 0),
+    so a profile taken at (N2, N2) can be pooled to any (r*N2, N2) consumer
+    granularity bitwise-identically to profiling the tensor there directly.
+    ``density_from_counts`` turns them into the densities the Analyzer reads.
     """
     m, n = x.shape
     bm, bn = block
@@ -51,8 +54,17 @@ def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
         x = jnp.pad(x, ((0, pm), (0, pn)))
     mb, nb = x.shape[0] // bm, x.shape[1] // bn
     nz = (x != 0).reshape(mb, bm, nb, bn)
-    counts = jnp.sum(nz, axis=(1, 3))
-    return density_from_counts(counts, m, n, bm, bn)
+    return jnp.sum(nz, axis=(1, 3))
+
+
+def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
+    """Per-block element density.  (M, N) -> (Mb, Nb) in [0, 1].
+
+    Blocks are the paper's data partitions (N1/N2 sized); the Analyzer makes
+    one K2P decision per partition pair from these numbers.
+    """
+    m, n = x.shape
+    return density_from_counts(block_counts(x, block), m, n, *block)
 
 
 def tile_occupancy(x: jnp.ndarray, tile: Tuple[int, int]) -> jnp.ndarray:
@@ -82,6 +94,57 @@ def block_density_from_mask(mask: jnp.ndarray, block: Tuple[int, int]) -> jnp.nd
         mask = jnp.pad(mask, ((0, pm), (0, pn)))
     mb, nb = mask.shape[0] // bm, mask.shape[1] // bn
     return jnp.mean(mask.reshape(mb, bm, nb, bn), axis=(1, 3))
+
+
+@dataclasses.dataclass
+class BlockProfile:
+    """A propagated block-sparsity profile (counts, not densities).
+
+    This is what the fused whole-model executor threads between layers: the
+    producer kernel emits nonzero counts at the repo-wide feature granularity
+    (N2, N2) as part of its writeback (``DynasparseResult.out_counts``), and
+    each consumer pools/normalizes them to its own operand granularity
+    WITHOUT touching the materialized tensor.  Counts make the chain exact:
+    ``pool_rows`` is an integer sum, so the pooled profile is bitwise equal
+    to profiling the tensor directly at the consumer's block size (the
+    density-space ``runtime._pool_rows`` mean-pool used by the cost-model
+    simulator is exact only for full blocks).
+
+    ``counts`` may be host numpy or traced jnp; all methods are
+    jit-compatible and shape-static.
+    """
+
+    counts: jnp.ndarray             # (Mb, Nb) nonzero counts per block
+    shape: Tuple[int, int]          # unpadded (m, n) of the profiled tensor
+    block: Tuple[int, int]          # (bm, bn) granularity of ``counts``
+
+    @classmethod
+    def measure(cls, x: jnp.ndarray, block: Tuple[int, int]) -> "BlockProfile":
+        return cls(block_counts(x, block), tuple(x.shape), tuple(block))
+
+    def densities(self) -> jnp.ndarray:
+        """The (Mb, Nb) densities the Analyzer plans from -- normalized to
+        the unpadded elements actually inside each block, same rule as
+        ``block_density`` (host/traced parity on ragged edges)."""
+        return density_from_counts(self.counts, *self.shape, *self.block)
+
+    def pool_rows(self, r: int) -> "BlockProfile":
+        """Merge ``r`` row blocks at a time: (N2, N2) -> (r*N2, N2).
+
+        Exact for counts (sum; zero-padded tail blocks add nothing), which
+        is how an Aggregate consumer reads a feature profile at its
+        (N1, N2) fiber granularity.
+        """
+        if r <= 1:
+            return self
+        c = self.counts
+        pad = (-c.shape[0]) % r
+        if pad:
+            c = jnp.concatenate(
+                [c, jnp.zeros((pad, c.shape[1]), c.dtype)], axis=0)
+        pooled = c.reshape(-1, r, c.shape[1]).sum(axis=1)
+        return BlockProfile(pooled, self.shape,
+                            (self.block[0] * r, self.block[1]))
 
 
 @dataclasses.dataclass

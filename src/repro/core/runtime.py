@@ -33,12 +33,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import analyzer, scheduler
+from repro.core import analyzer, profiler, scheduler
 from repro.core.compiler import CompiledModel
 from repro.core.dynasparse import DynasparseResult, dynasparse_matmul
 from repro.core.ir import Activation, AggOp, KernelIR, KernelType
@@ -72,6 +73,9 @@ class KernelReport:
 class InferenceReport:
     kernels: List[KernelReport]
     strategy: str
+    # set by the fused whole-model executor: the single program's wall time
+    # (per-kernel walls are unobservable inside one XLA program).
+    fused_wall_seconds: Optional[float] = None
 
     @property
     def total_cycles(self) -> float:
@@ -84,12 +88,34 @@ class InferenceReport:
     def k2p_seconds(self) -> float:
         return float(sum(k.k2p_seconds for k in self.kernels))
 
+    def k2p_exposed_seconds(self, freq_hz: float) -> float:
+        """Modeled K2P time left on the critical path under layer overlap.
+
+        The paper's runtime plans kernel l+1 on the soft processor while the
+        accelerator executes kernel l (Section V-B2), so only the first
+        kernel's planning plus any per-kernel planning time EXCEEDING the
+        previous kernel's execution is exposed.  The fused executor realizes
+        exactly this dependence structure (plan l+1 from l's writeback
+        profile), so this is its modeled K2P overhead; ``k2p_seconds`` is
+        the non-overlapped sum the per-kernel path models.
+        """
+        ks = self.kernels
+        if not ks:
+            return 0.0
+        exposed = ks[0].k2p_seconds
+        for prev, cur in zip(ks, ks[1:]):
+            exposed += max(0.0, cur.k2p_seconds
+                           - prev.makespan_cycles / freq_hz)
+        return exposed
+
     @property
     def k2p_wall_seconds(self) -> float:
         return float(sum(k.k2p_wall_seconds for k in self.kernels))
 
     @property
     def wall_seconds(self) -> float:
+        if self.fused_wall_seconds is not None:
+            return self.fused_wall_seconds
         return float(sum(k.wall_seconds for k in self.kernels))
 
     @property
@@ -184,7 +210,27 @@ def simulate_inference(
     model: Optional[FPGACostModel] = None,
     n_cc: Optional[int] = None,
 ) -> InferenceReport:
-    """Predicted latency of a full GNN inference under a mapping strategy."""
+    """Predicted latency of a full GNN inference under a mapping strategy.
+
+    Pure cost-model execution, no numerics: ``stats_env`` maps every tensor
+    name the IR references to its :class:`~repro.core.profiler.SparsityStats`
+    -- compile-time-known tensors measured, runtime intermediates predicted
+    by :func:`propagate_stats` (the independent-Bernoulli density
+    propagation).  Stats follow the repo-wide granularity convention:
+    adjacency at (N1, N1), features/weights at (N2, N2); Aggregate kernels
+    mean-pool feature row-blocks to their (N1, N2) fiber granularity via
+    ``_pool_rows`` inside ``_operand_block_densities``.
+
+    Per kernel: host K2P planning (``analyzer.plan_kernel_host``, chunked
+    so NELL-sized grids stay in memory), Alg. 8 dynamic scheduling over
+    ``n_cc`` cores, and the Table IV cost under ``model``
+    (``FPGACostModel`` for the paper's numbers, ``TPUCostModel`` for the
+    TPU adaptation).  ``strategy`` follows the same contract as
+    :class:`DynasparseEngine`.  This is how the paper-table benchmarks
+    evaluate graphs whose dense materialization would not fit this
+    container (NELL/Reddit), mirroring how the paper's own latency derives
+    from its model + measured densities + Alg. 8 load balance.
+    """
     model = model or FPGACostModel()
     n_cc = n_cc or compiled.partition.n_cc
     reports = []
@@ -203,10 +249,40 @@ def simulate_inference(
 
 
 # ---------------------------------------------------------------------------
-# Real-numerics engine: one jit-compiled executor call per kernel.
+# Real-numerics engines.
 # ---------------------------------------------------------------------------
 
 _AGG_PRE = {AggOp.SUM: "A", AggOp.MEAN: "A_mean"}
+
+
+def _agg_lhs_name(k: KernelIR) -> str:
+    """Env name of an Aggregate kernel's adjacency operand (A or A_mean)."""
+    name = _AGG_PRE.get(k.agg_op)
+    if name is None:
+        raise NotImplementedError(
+            f"{k.agg_op} aggregation is not matmul-representable")
+    return name
+
+
+def _bookkeep_kernel(k: KernelIR, codes, dens_x, dens_y, n_cc: int, model
+                     ) -> KernelReport:
+    """Host bookkeeping from the planner's codes (the MicroBlaze's role):
+    Table IV per-task costs, Alg. 8 scheduling, primitive histogram, modeled
+    + measured K2P time.  Shared by the per-kernel and fused engines so both
+    report identically."""
+    codes = np.asarray(codes)
+    dx = np.asarray(dens_x)
+    dy = np.asarray(dens_y)
+    t_plan = time.perf_counter()
+    costs = analyzer.task_costs_host(codes, dx, dy, k.block_dims, model)
+    sched = scheduler.schedule_dynamic(costs.reshape(-1), n_cc)
+    hist = np.bincount(codes.reshape(-1), minlength=4).astype(np.int64)
+    k2p_wall = time.perf_counter() - t_plan
+    return KernelReport(
+        name=k.name, num_tasks=int(costs.size), histogram=hist,
+        makespan_cycles=sched.makespan, utilization=sched.utilization,
+        k2p_seconds=_k2p_model_seconds(codes.size),
+        k2p_wall_seconds=k2p_wall, dens_x=dx, dens_y=dy)
 
 
 class DynasparseEngine:
@@ -218,7 +294,32 @@ class DynasparseEngine:
     modeled + measured K2P time) from the planner's codes, which the
     executor returns as side outputs.  The result's block-density profile
     (fused at writeback) is kept in ``profiled_densities`` so layer l+1 can
-    be planned while layer l executes.
+    be planned while layer l executes; :class:`FusedModelExecutor` is that
+    idea taken to its conclusion (the whole model as one program) -- keep
+    THIS engine for debugging/reports, it has real per-kernel wall clocks
+    and inspectable intermediates.
+
+    Contracts:
+
+    * ``strategy`` -- one of ``analyzer.STRATEGIES``: ``"dynamic"``
+      (Algorithm 7, per-partition-pair decisions from profiled densities),
+      ``"s1"`` (Aggregate->SpDMM / Update->GEMM), ``"s2"`` (all SpDMM),
+      ``"gemm"`` (all dense).  Fixed per engine so executables cache per
+      strategy; outputs are value-identical across strategies (dispatch
+      changes cost, never results).
+    * ``use_kernels`` -- route the non-SKIP branches through the Pallas
+      block-sparse kernels (``repro.kernels``) with ``tile``/``unroll``;
+      off-TPU they run in interpret mode, so leave False (XLA dot path)
+      unless exercising kernel code.  Numerics are preserved either way.
+    * density-profile shapes -- operand profiles follow the kernel's
+      ``block_dims``: an (I, K) grid for the lhs at (bm, bk) blocks and a
+      (K, J) grid for the rhs at (bk, bn) blocks.  Feature-matrix stats
+      live at (N2, N2) repo-wide; an Aggregate consumer reads features at
+      (N1, N2) fiber granularity by row-pooling (``_pool_rows`` /
+      ``profiler.BlockProfile.pool_rows``).  ``profiled_densities[out]``
+      is the post-epilogue writeback profile at (N2, N2).
+    * ``keep_codes=True`` additionally records every kernel's (I, J, K)
+      planner code grid in ``planned_codes`` (parity tests diff them).
     """
 
     def __init__(self, *, strategy: str = "dynamic",
@@ -226,13 +327,17 @@ class DynasparseEngine:
                  n_cc: Optional[int] = None,
                  use_kernels: bool = False,
                  tile: Tuple[int, int] = (16, 16),
-                 unroll: int = 1):
+                 unroll: int = 1,
+                 keep_codes: bool = False):
         self.strategy = strategy
         self.model = model or FPGACostModel()
         self.n_cc = n_cc
         self.use_kernels = use_kernels
         self.tile = tile
         self.unroll = unroll
+        # debug/report switch: record every kernel's planner code grid in
+        # ``planned_codes`` (the fused-vs-per-kernel parity tests diff them).
+        self.keep_codes = keep_codes
         # executable cache: signature -> partial-applied jitted executor.
         # jax.jit has its own global trace cache; this local cache makes the
         # hit/miss behavior observable (tests, benchmarks) and keeps key
@@ -241,12 +346,14 @@ class DynasparseEngine:
         self.cache_hits = 0
         self.cache_misses = 0
         self.profiled_densities: Dict[str, jnp.ndarray] = {}
+        self.planned_codes: Dict[str, np.ndarray] = {}
 
     def run(self, compiled: CompiledModel, tensors: Dict[str, jnp.ndarray]
             ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
         env = dict(tensors)
         n_cc = self.n_cc or compiled.partition.n_cc
         self.profiled_densities = {}
+        self.planned_codes = {}
         reports: List[KernelReport] = []
         for k in compiled.graph.topo_order():
             t0 = time.perf_counter()
@@ -292,11 +399,7 @@ class DynasparseEngine:
     def _run_kernel(self, k: KernelIR, env: Dict[str, jnp.ndarray],
                     n_cc: int) -> Tuple[jnp.ndarray, KernelReport]:
         if k.kernel_type == KernelType.AGGREGATE:
-            lhs_name = _AGG_PRE.get(k.agg_op)
-            if lhs_name is None:
-                raise NotImplementedError(
-                    f"{k.agg_op} aggregation is not matmul-representable")
-            x = env[lhs_name]
+            x = env[_agg_lhs_name(k)]
         else:
             x = env[k.lhs]
         y = env[k.rhs]
@@ -306,21 +409,249 @@ class DynasparseEngine:
         fn = self._executor(k, x, y, residual is not None)
         res: DynasparseResult = fn(x, y, residual=residual)
         self.profiled_densities[k.out] = res.out_density
+        if self.keep_codes:
+            self.planned_codes[k.out] = np.asarray(res.codes)
 
         # --- host bookkeeping from the planner's codes (side outputs) ---
-        codes = np.asarray(res.codes)
-        dx = np.asarray(res.dens_x)
-        dy = np.asarray(res.dens_y)
-        t_plan = time.perf_counter()
-        costs = analyzer.task_costs_host(
-            codes, dx, dy, k.block_dims, self.model)
-        sched = scheduler.schedule_dynamic(costs.reshape(-1), n_cc)
-        hist = np.bincount(codes.reshape(-1), minlength=4).astype(np.int64)
-        k2p_wall = time.perf_counter() - t_plan
-
-        rep = KernelReport(
-            name=k.name, num_tasks=int(costs.size), histogram=hist,
-            makespan_cycles=sched.makespan, utilization=sched.utilization,
-            k2p_seconds=_k2p_model_seconds(codes.size),
-            k2p_wall_seconds=k2p_wall, dens_x=dx, dens_y=dy)
+        rep = _bookkeep_kernel(k, res.codes, res.dens_x, res.dens_y,
+                               n_cc, self.model)
         return res.out, rep
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-model executor: ONE jit-compiled program per inference.
+# ---------------------------------------------------------------------------
+
+class FusedModelExecutor:
+    """Traces a full ``CompiledModel`` into one jit-compiled program.
+
+    Where :class:`DynasparseEngine` launches one cached executable per
+    kernel (and each kernel's trace re-profiles its own operands), this
+    executor walks the topologically-ordered kernel list inside a SINGLE
+    trace and chains the writeback profiles between layers:
+
+    * graph inputs (adjacency, features, weights) are profiled ONCE per
+      (tensor identity, granularity) on the host and handed to the program
+      as arguments -- the paper's split, where the COMPILER profiles the
+      compile-time-known tensors and the runtime only ever profiles
+      intermediates (Section IV); repeated inferences re-use the cached
+      input profiles;
+    * every intermediate is NEVER re-profiled -- its producer's
+      ``out_counts`` writeback profile (at the repo-wide (N2, N2) feature
+      granularity) is pooled to the consumer's operand granularity by
+      ``profiler.BlockProfile.pool_rows`` (an exact integer sum, bitwise
+      equal to direct profiling) and fed to
+      ``analyzer.plan_codes_from_profiles``.
+
+    Kernel l+1's K2P decision therefore depends only on kernel l's profile,
+    which XLA emits at l's writeback -- so the planning of l+1 can be
+    scheduled concurrently with l's task loop.  This is the paper's
+    soft-processor/accelerator K2P-execution overlap (Section V-B2)
+    realized as dataflow inside one program, with no host round-trip
+    between layers.  ``InferenceReport.k2p_exposed_seconds`` models the
+    resulting overlapped soft-processor time.
+
+    Intermediate feature matrices live only inside the XLA program (they
+    are temporaries, reused by buffer assignment, and are not returned
+    unless ``keep_intermediates=True``); set ``donate=True`` to also donate
+    the input tensor buffers when the caller will not reuse them.
+
+    The per-kernel :class:`DynasparseEngine` remains the debug/report path
+    (per-kernel wall clocks, ``profiled_densities`` inspection between
+    launches); this executor is the serving path.  Both report the same
+    ``InferenceReport`` bookkeeping -- histograms, Alg. 8 makespan,
+    modeled K2P time -- derived from the planner's codes, which the fused
+    program returns as side outputs; ``collect_report=False`` skips that
+    host work wholesale for latency-critical serving.
+
+    ``run`` mirrors ``DynasparseEngine.run``'s contract (an env dict
+    containing the final output plus an ``InferenceReport``), so model
+    bundles (``models.gnn.DenseGNN``) accept either engine.
+    """
+
+    def __init__(self, *, strategy: str = "dynamic",
+                 model: Optional[FPGACostModel] = None,
+                 n_cc: Optional[int] = None,
+                 use_kernels: bool = False,
+                 tile: Tuple[int, int] = (16, 16),
+                 unroll: int = 1,
+                 keep_intermediates: bool = False,
+                 donate: bool = False,
+                 keep_codes: bool = False,
+                 collect_report: bool = True):
+        self.strategy = strategy
+        self.model = model or FPGACostModel()
+        self.n_cc = n_cc
+        self.use_kernels = use_kernels
+        self.tile = tile
+        self.unroll = unroll
+        self.keep_intermediates = keep_intermediates
+        self.donate = donate
+        self.keep_codes = keep_codes
+        # serving knob: False skips ALL per-kernel host bookkeeping --
+        # no device->host transfer of the (I, J, K) code grids (tens of MB
+        # per kernel at NELL scale), no O(I*J*K) cost prediction, no Alg. 8
+        # scheduling.  run() then returns a report with no kernel entries,
+        # only the fused wall clock.
+        self.collect_report = collect_report
+        # one jitted whole-model program per (model structure, tensor
+        # signature); cache hits re-launch without re-tracing.
+        self._programs: Dict[tuple, tuple] = {}
+        # host-side input-profile cache: (env name, granularity) ->
+        # (tensor ref, BlockProfile).  The ref keeps the array alive so the
+        # identity check is sound; a caller passing fresh tensor VALUES
+        # (same shapes) gets re-profiled automatically.
+        self._input_profiles: Dict[tuple, tuple] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        # incremented inside the traced function: counts actual traces, not
+        # launches (the one-jitted-call-per-inference contract is tested).
+        self.trace_count = 0
+        self.profiled_densities: Dict[str, jnp.ndarray] = {}
+        self.planned_codes: Dict[str, np.ndarray] = {}
+
+    # -- program construction ----------------------------------------------
+    def _signature(self, compiled: CompiledModel,
+                   tensors: Dict[str, jnp.ndarray]) -> tuple:
+        ks = tuple(
+            (k.name, k.kernel_type, k.block_dims, k.scheme.n2, k.lhs, k.rhs,
+             k.out, k.agg_op.value, k.epilogue_add, k.epilogue_scale,
+             k.activation.value if k.activation_enabled else "none")
+            for k in compiled.graph.topo_order())
+        ts = tuple(sorted((name, tuple(v.shape), str(jnp.asarray(v).dtype))
+                          for name, v in tensors.items()))
+        return (ks, ts)
+
+    @staticmethod
+    def _resolved_flows(compiled: CompiledModel):
+        """Per-kernel (lhs, rhs) OperandFlows with Aggregate lhs rebound to
+        its env name ("A"/"A_mean"; the IR names it "A")."""
+        out = []
+        for k, (fx, fy) in zip(compiled.graph.topo_order(),
+                               compiled.graph.operand_flows()):
+            if k.kernel_type == KernelType.AGGREGATE:
+                fx = dataclasses.replace(fx, source=_agg_lhs_name(k))
+            out.append((fx, fy))
+        return out
+
+    @staticmethod
+    def _needed_inputs(flows) -> List[tuple]:
+        """Ordered unique (env name, granularity) of every graph-input
+        profile the program consumes (profiled host-side, passed in)."""
+        seen: List[tuple] = []
+        for fx, fy in flows:
+            for f in (fx, fy):
+                key = (f.source, f.block)
+                if f.producer is None and key not in seen:
+                    seen.append(key)
+        return seen
+
+    def _build(self, compiled: CompiledModel) -> tuple:
+        kernels = compiled.graph.topo_order()
+        flows = self._resolved_flows(compiled)
+        needed = self._needed_inputs(flows)
+        final = kernels[-1].out
+
+        def fused(tensors, in_counts):
+            self.trace_count += 1          # runs at trace time only
+            env = dict(tensors)
+            profiles: Dict[tuple, profiler.BlockProfile] = {
+                (name, blk): profiler.BlockProfile(
+                    counts, tuple(env[name].shape), blk)
+                for (name, blk), counts in zip(needed, in_counts)}
+            counts_env: Dict[str, profiler.BlockProfile] = {}
+            sides = []
+            for k, (fx, fy) in zip(kernels, flows):
+                x, y = env[fx.source], env[fy.source]
+                prof_x, prof_y = (
+                    counts_env[f.source].pool_rows(f.pool_rows)
+                    if f.producer is not None else profiles[(f.source, f.block)]
+                    for f in (fx, fy))
+                codes, dens_x, dens_y = analyzer.plan_codes_from_profiles(
+                    self.strategy, prof_x, prof_y, self.model,
+                    kernel_type=k.kernel_type)
+                residual = (env[k.epilogue_add]
+                            if k.epilogue_add is not None else None)
+                n2 = k.scheme.n2
+                res = dynasparse_matmul(
+                    x, y, codes=codes, dens_x=dens_x, dens_y=dens_y,
+                    residual=residual, strategy=self.strategy,
+                    kernel_type=k.kernel_type,
+                    epilogue_scale=(k.epilogue_scale
+                                    if residual is not None else 1.0),
+                    activation=(k.activation.value
+                                if k.activation_enabled else "none"),
+                    out_block=(n2, n2), block=k.block_dims,
+                    cost_model=self.model, use_kernels=self.use_kernels,
+                    tile=self.tile, unroll=self.unroll)
+                env[k.out] = res.out
+                counts_env[k.out] = profiler.BlockProfile(
+                    res.out_counts, res.out.shape, (n2, n2))
+                sides.append((res.codes, res.dens_x, res.dens_y,
+                              res.out_density))
+            outs = (dict(env) if self.keep_intermediates
+                    else {final: env[final]})
+            return outs, sides
+
+        fn = jax.jit(fused, donate_argnums=(0,) if self.donate else ())
+        return fn, needed
+
+    def _program(self, compiled: CompiledModel,
+                 tensors: Dict[str, jnp.ndarray]) -> tuple:
+        key = self._signature(compiled, tensors)
+        entry = self._programs.get(key)
+        if entry is not None:
+            self.cache_hits += 1
+            return entry
+        self.cache_misses += 1
+        entry = self._build(compiled)
+        self._programs[key] = entry
+        return entry
+
+    def _input_counts(self, needed, tensors) -> Tuple[jnp.ndarray, ...]:
+        """The graph-input profiles, measured once per tensor identity
+        (the compiler's static-profiling role; intermediates are profiled
+        by the program itself, fused at writeback)."""
+        out = []
+        for name, blk in needed:
+            arr = tensors[name]
+            cached = self._input_profiles.get((name, blk))
+            if cached is None or cached[0] is not arr:
+                cached = (arr, profiler.BlockProfile.measure(arr, blk))
+                self._input_profiles[(name, blk)] = cached
+            out.append(cached[1].counts)
+        return tuple(out)
+
+    # -- execution ----------------------------------------------------------
+    def run(self, compiled: CompiledModel, tensors: Dict[str, jnp.ndarray]
+            ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
+        """One whole-model inference = one jitted call.
+
+        Returns ``(env, report)`` where ``env`` holds the final output (all
+        intermediates too iff ``keep_intermediates=True``) and ``report``
+        carries the same per-kernel bookkeeping as the per-kernel engine,
+        plus ``fused_wall_seconds`` (the single program's wall clock).
+        """
+        n_cc = self.n_cc or compiled.partition.n_cc
+        fn, needed = self._program(compiled, tensors)
+        in_counts = self._input_counts(needed, tensors)
+        t0 = time.perf_counter()
+        outs, sides = fn(tensors, in_counts)
+        jax.block_until_ready((outs, sides))
+        wall = time.perf_counter() - t0
+
+        self.profiled_densities = {
+            k.out: side[3]
+            for k, side in zip(compiled.graph.topo_order(), sides)}
+        if self.keep_codes:
+            self.planned_codes = {
+                k.out: np.asarray(side[0])
+                for k, side in zip(compiled.graph.topo_order(), sides)}
+        reports = []
+        if self.collect_report:
+            reports = [
+                _bookkeep_kernel(k, codes, dens_x, dens_y, n_cc, self.model)
+                for k, (codes, dens_x, dens_y, _) in
+                zip(compiled.graph.topo_order(), sides)]
+        return outs, InferenceReport(reports, self.strategy,
+                                     fused_wall_seconds=wall)

@@ -62,6 +62,19 @@ _COLL_RE = re.compile(
 _GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Version-stable view of ``Compiled.cost_analysis()``.
+
+    jax <= 0.4.x returns a one-element LIST of per-program dicts; newer
+    releases return the dict directly.  Every consumer (the dry-run cost
+    passes, the mesh tests) goes through this normalization.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Per-device OPERAND bytes per collective kind (documented convention:
     AG operand = result/shards, RS operand = result*shards, others =
@@ -286,7 +299,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         pcfg = _variant(cfg, shape, mode="cost", n_periods=np_)
         compiled, t_low, t_comp = compile_cell(pcfg, shape, mesh,
                                                num_microbatches=1)
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         coll = collective_bytes(compiled.as_text())
         costs[np_] = {
             "flops": float(ca.get("flops", 0.0)),

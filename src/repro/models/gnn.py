@@ -54,14 +54,16 @@ class DenseGNN:
     tensors: Dict[str, jnp.ndarray]
     graph: graph_data.DenseGraph
 
-    def run(self, engine: Optional[runtime.DynasparseEngine] = None,
-            *, strategy: Optional[str] = None
+    def run(self, engine=None, *, strategy: Optional[str] = None
             ) -> Tuple[jnp.ndarray, runtime.InferenceReport]:
         """One inference through the unified jit-compiled executor.
 
-        Every kernel is a single traced call (executable cached across
-        ``run`` invocations of the same engine); pass ``strategy`` as a
-        shortcut for ``DynasparseEngine(strategy=...)``.
+        ``engine`` is either a :class:`runtime.DynasparseEngine` (one cached
+        executable per kernel -- the debug/report path) or a
+        :class:`runtime.FusedModelExecutor` (the whole model as ONE
+        jit-compiled program with layer-overlap K2P planning -- the serving
+        path); both share the ``run(compiled, tensors)`` contract.  Pass
+        ``strategy`` as a shortcut for ``DynasparseEngine(strategy=...)``.
         """
         if engine is None:
             engine = runtime.DynasparseEngine(strategy=strategy or "dynamic")

@@ -37,6 +37,25 @@ class Result:
 
 
 class ServeEngine:
+    """Slot-based continuous-batching LM server over a ``ModelBundle``.
+
+    ``generate(requests)`` admits requests in waves of ``slots`` concurrent
+    sequences: one jitted left-padded prefill per wave, then one jitted
+    decode step per token shared by all live slots (both cached by
+    ``jax.jit`` on (batch, seq) shapes, so steady-state waves re-launch
+    without re-tracing).  Sampling is greedy at ``temperature<=0``, else
+    softmax sampling on the host.  Sequences stop at ``max_new_tokens`` or
+    ``max_seq``; the KV cache is reset per admission wave (slot-level paged
+    reuse is the recorded extension point, DESIGN.md section 5).
+
+    Dynasparse tie-in: build the bundle with ``cfg.dynasparse_ffn=True``
+    and every FFN matmul in prefill/decode routes through
+    ``dynasparse_matmul`` (``models.layers._linear``), giving pruned
+    weights / sparse activations per-block K2P dispatch at serve time --
+    the same contracts as the GNN engines (strategy fixed to ``dynamic``,
+    ``use_kernels`` off => XLA dot path with SKIP elision).
+    """
+
     def __init__(self, bundle: ModelBundle, params, *, slots: int = 8,
                  max_seq: int = 256, temperature: float = 0.0,
                  rng_seed: int = 0):

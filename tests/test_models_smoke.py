@@ -50,6 +50,14 @@ def test_decode_matches_full_forward(arch):
         # dropless makes decode-vs-full exact (see test_moe.py)
         cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
             cfg.moe, capacity_factor=float(cfg.moe.n_experts * cfg.moe.top_k)))
+    if cfg.xlstm is not None:
+        # xlstm's prefill (chunked parallel form) and decode (stepwise
+        # matrix-memory recurrence) accumulate in different orders; in bf16
+        # the divergence (~5% rel at 32 steps) exceeds the generic tolerance
+        # while f32 agrees to ~1e-5, i.e. the recurrence is correct and the
+        # gap is pure accumulation noise.  Verify the decode LOGIC in f32;
+        # bf16 serving accuracy is an eval-level question, not a shape test.
+        cfg = dataclasses.replace(cfg, dtype="float32")
     bundle = model_zoo.build(cfg)
     params = bundle.init_params(RNG)
     S = 32

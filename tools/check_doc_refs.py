@@ -1,0 +1,100 @@
+"""Docs lint: every code reference in README.md / DESIGN.md must resolve.
+
+Two checks, both cheap enough for every push:
+
+1. path references -- any backticked `src/...`, `tests/...`,
+   `benchmarks/...`, `examples/...`, or top-level `*.md` / `*.json` /
+   `*.py` token must exist in the repo;
+2. import references -- any backticked dotted `repro.*` module path must
+   import (attribute tails like `repro.core.runtime.FusedModelExecutor`
+   resolve module-then-attr), and the public engine surface the docs lean
+   on is imported explicitly so a rename breaks CI, not the reader.
+
+  PYTHONPATH=src python tools/check_doc_refs.py
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOCS = ["README.md", "DESIGN.md"]
+
+_PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|examples|tools|results)/[\w./-]+"
+    r"|[\w-]+\.(?:md|json|py|yml))`")
+_MOD_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+# the public surface the documentation's prose names without backticked
+# dotted paths; keep in sync with README "Choosing an executor" / DESIGN 0/9
+PUBLIC = [
+    ("repro.core.runtime", ["DynasparseEngine", "FusedModelExecutor",
+                            "simulate_inference", "propagate_stats",
+                            "InferenceReport"]),
+    ("repro.core.dynasparse", ["dynasparse_matmul", "DynasparseResult",
+                               "dynasparse_dense_equivalent"]),
+    ("repro.core.analyzer", ["plan_codes", "plan_codes_from_profiles",
+                             "STRATEGIES"]),
+    ("repro.core.profiler", ["BlockProfile", "SparsityStats",
+                             "block_density", "block_counts"]),
+    ("repro.core.ir", ["OperandFlow", "ComputationGraph"]),
+    ("repro.serving.engine", ["ServeEngine"]),
+    ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS"]),
+]
+
+
+def check_paths(errors: list) -> None:
+    for doc in DOCS:
+        text = (REPO / doc).read_text()
+        for ref in _PATH_RE.findall(text):
+            if not (REPO / ref).exists():
+                errors.append(f"{doc}: `{ref}` does not exist")
+
+
+def _resolve(dotted: str) -> None:
+    parts = dotted.split(".")
+    for split in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:split]))
+        except ImportError:
+            continue
+        for attr in parts[split:]:
+            obj = getattr(obj, attr)      # AttributeError = broken ref
+        return
+    raise ImportError(f"no importable prefix of {dotted}")
+
+
+def check_imports(errors: list) -> None:
+    for doc in DOCS:
+        text = (REPO / doc).read_text()
+        for ref in set(_MOD_RE.findall(text)):
+            try:
+                _resolve(ref)
+            except (ImportError, AttributeError) as e:
+                errors.append(f"{doc}: `{ref}` does not resolve ({e})")
+    for mod, names in PUBLIC:
+        try:
+            m = importlib.import_module(mod)
+        except ImportError as e:
+            errors.append(f"public surface: {mod} does not import ({e})")
+            continue
+        for name in names:
+            if not hasattr(m, name):
+                errors.append(f"public surface: {mod}.{name} is gone")
+
+
+def main() -> int:
+    errors: list = []
+    check_paths(errors)
+    check_imports(errors)
+    for e in errors:
+        print(f"DOC-REF ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"doc refs OK ({', '.join(DOCS)} + public surface)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
