@@ -14,12 +14,13 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (bench_engine, fig13_runtime_overhead, roofline,
-                        table4_perf_model, table7_k2p, table8_pruning,
-                        table9_compiler, table10_accelerators)
+from benchmarks import (bench_engine, bench_serving, fig13_runtime_overhead,
+                        roofline, table4_perf_model, table7_k2p,
+                        table8_pruning, table9_compiler, table10_accelerators)
 
 SUITES = {
     "engine": lambda full: bench_engine.run(fast=not full),
+    "serving": lambda full: bench_serving.run(fast=not full),
     "table4": lambda full: table4_perf_model.run(fast=not full),
     "table7": lambda full: table7_k2p.run(),
     "table8": lambda full: table8_pruning.run(),

@@ -57,6 +57,24 @@ def block_counts(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
     return jnp.sum(nz, axis=(1, 3))
 
 
+def batched_block_counts(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
+    """Per-block nonzero counts for a stacked batch.  (B, M, N) -> (B, Mb, Nb).
+
+    One fused reduction profiles a whole admission wave of request tensors
+    (the batched serving path).  Each slice is bitwise equal to
+    ``block_counts`` on that slice alone -- integer sums are order-free --
+    which is what keeps batched-vs-per-request planner parity exact.
+    """
+    b, m, n = x.shape
+    bm, bn = block
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)))
+    mb, nb = x.shape[1] // bm, x.shape[2] // bn
+    nz = (x != 0).reshape(b, mb, bm, nb, bn)
+    return jnp.sum(nz, axis=(2, 4))
+
+
 def block_density(x: jnp.ndarray, block: Tuple[int, int]) -> jnp.ndarray:
     """Per-block element density.  (M, N) -> (Mb, Nb) in [0, 1].
 

@@ -466,7 +466,10 @@ class FusedModelExecutor:
 
     ``run`` mirrors ``DynasparseEngine.run``'s contract (an env dict
     containing the final output plus an ``InferenceReport``), so model
-    bundles (``models.gnn.DenseGNN``) accept either engine.
+    bundles (``models.gnn.DenseGNN``) accept either engine.  ``run_batch``
+    is the multi-tenant surface on top: one jitted call serving a stacked
+    WAVE of inferences over shared weights (``serving.graph_engine`` is
+    the request loop that feeds it).
     """
 
     def __init__(self, *, strategy: str = "dynamic",
@@ -511,6 +514,11 @@ class FusedModelExecutor:
         self.planned_codes: Dict[str, np.ndarray] = {}
 
     # -- program construction ----------------------------------------------
+    @staticmethod
+    def _tensor_sig(tensors: Dict[str, jnp.ndarray]) -> tuple:
+        return tuple(sorted((name, tuple(v.shape), str(jnp.asarray(v).dtype))
+                            for name, v in tensors.items()))
+
     def _signature(self, compiled: CompiledModel,
                    tensors: Dict[str, jnp.ndarray]) -> tuple:
         ks = tuple(
@@ -518,9 +526,7 @@ class FusedModelExecutor:
              k.out, k.agg_op.value, k.epilogue_add, k.epilogue_scale,
              k.activation.value if k.activation_enabled else "none")
             for k in compiled.graph.topo_order())
-        ts = tuple(sorted((name, tuple(v.shape), str(jnp.asarray(v).dtype))
-                          for name, v in tensors.items()))
-        return (ks, ts)
+        return (ks, self._tensor_sig(tensors))
 
     @staticmethod
     def _resolved_flows(compiled: CompiledModel):
@@ -546,6 +552,45 @@ class FusedModelExecutor:
                     seen.append(key)
         return seen
 
+    def _trace_kernels(self, kernels, flows, env: Dict[str, jnp.ndarray],
+                       profiles: Dict[tuple, profiler.BlockProfile]) -> list:
+        """The shared fused trace body (single-inference AND batched-wave
+        programs): walk the topo-ordered kernels, planning each from
+        ``profiles`` (graph inputs) or the producer's chained writeback
+        counts.  Mutates ``env`` with every kernel's output and returns the
+        per-kernel (codes, dens_x, dens_y, out_density) side outputs."""
+        counts_env: Dict[str, profiler.BlockProfile] = {}
+        sides = []
+        for k, (fx, fy) in zip(kernels, flows):
+            x, y = env[fx.source], env[fy.source]
+            prof_x, prof_y = (
+                counts_env[f.source].pool_rows(f.pool_rows)
+                if f.producer is not None else profiles[(f.source, f.block)]
+                for f in (fx, fy))
+            codes, dens_x, dens_y = analyzer.plan_codes_from_profiles(
+                self.strategy, prof_x, prof_y, self.model,
+                kernel_type=k.kernel_type)
+            residual = (env[k.epilogue_add]
+                        if k.epilogue_add is not None else None)
+            n2 = k.scheme.n2
+            res = dynasparse_matmul(
+                x, y, codes=codes, dens_x=dens_x, dens_y=dens_y,
+                residual=residual, strategy=self.strategy,
+                kernel_type=k.kernel_type,
+                epilogue_scale=(k.epilogue_scale
+                                if residual is not None else 1.0),
+                activation=(k.activation.value
+                            if k.activation_enabled else "none"),
+                out_block=(n2, n2), block=k.block_dims,
+                cost_model=self.model, use_kernels=self.use_kernels,
+                tile=self.tile, unroll=self.unroll)
+            env[k.out] = res.out
+            counts_env[k.out] = profiler.BlockProfile(
+                res.out_counts, res.out.shape, (n2, n2))
+            sides.append((res.codes, res.dens_x, res.dens_y,
+                          res.out_density))
+        return sides
+
     def _build(self, compiled: CompiledModel) -> tuple:
         kernels = compiled.graph.topo_order()
         flows = self._resolved_flows(compiled)
@@ -559,42 +604,54 @@ class FusedModelExecutor:
                 (name, blk): profiler.BlockProfile(
                     counts, tuple(env[name].shape), blk)
                 for (name, blk), counts in zip(needed, in_counts)}
-            counts_env: Dict[str, profiler.BlockProfile] = {}
-            sides = []
-            for k, (fx, fy) in zip(kernels, flows):
-                x, y = env[fx.source], env[fy.source]
-                prof_x, prof_y = (
-                    counts_env[f.source].pool_rows(f.pool_rows)
-                    if f.producer is not None else profiles[(f.source, f.block)]
-                    for f in (fx, fy))
-                codes, dens_x, dens_y = analyzer.plan_codes_from_profiles(
-                    self.strategy, prof_x, prof_y, self.model,
-                    kernel_type=k.kernel_type)
-                residual = (env[k.epilogue_add]
-                            if k.epilogue_add is not None else None)
-                n2 = k.scheme.n2
-                res = dynasparse_matmul(
-                    x, y, codes=codes, dens_x=dens_x, dens_y=dens_y,
-                    residual=residual, strategy=self.strategy,
-                    kernel_type=k.kernel_type,
-                    epilogue_scale=(k.epilogue_scale
-                                    if residual is not None else 1.0),
-                    activation=(k.activation.value
-                                if k.activation_enabled else "none"),
-                    out_block=(n2, n2), block=k.block_dims,
-                    cost_model=self.model, use_kernels=self.use_kernels,
-                    tile=self.tile, unroll=self.unroll)
-                env[k.out] = res.out
-                counts_env[k.out] = profiler.BlockProfile(
-                    res.out_counts, res.out.shape, (n2, n2))
-                sides.append((res.codes, res.dens_x, res.dens_y,
-                              res.out_density))
+            sides = self._trace_kernels(kernels, flows, env, profiles)
             outs = (dict(env) if self.keep_intermediates
                     else {final: env[final]})
             return outs, sides
 
         fn = jax.jit(fused, donate_argnums=(0,) if self.donate else ())
         return fn, needed
+
+    def _build_batch(self, compiled: CompiledModel, shared_needed: tuple,
+                     request_needed: tuple):
+        """One jitted program per (model, shared shapes, wave shapes): a
+        ``lax.scan`` over the stacked per-request tensors whose body is the
+        same fused kernel walk as the single-inference program.  Shared
+        tensors (weights) ride in as scan constants with host-cached
+        profiles; per-request graph inputs are profiled INSIDE the program
+        (``profiler.batched_block_counts``, one fused reduction per
+        (tensor, granularity) for the whole wave) -- each request is a new
+        graph, so its profiling is the runtime's job, not the host's."""
+        kernels = compiled.graph.topo_order()
+        flows = self._resolved_flows(compiled)
+        final = kernels[-1].out
+
+        def fused_wave(shared, shared_counts, batched):
+            self.trace_count += 1          # runs at trace time only
+            base: Dict[tuple, profiler.BlockProfile] = {
+                (name, blk): profiler.BlockProfile(
+                    counts, tuple(shared[name].shape), blk)
+                for (name, blk), counts in zip(shared_needed, shared_counts)}
+            wave_counts = tuple(
+                profiler.batched_block_counts(batched[name], blk)
+                for name, blk in request_needed)
+
+            def one(_, xs):
+                req, req_counts = xs
+                env = {**shared, **req}
+                profiles = dict(base)
+                for (name, blk), counts in zip(request_needed, req_counts):
+                    profiles[(name, blk)] = profiler.BlockProfile(
+                        counts, tuple(env[name].shape), blk)
+                sides = self._trace_kernels(kernels, flows, env, profiles)
+                outs = ({k.out: env[k.out] for k in kernels}
+                        if self.keep_intermediates else {final: env[final]})
+                return None, (outs, sides)
+
+            _, (outs, sides) = jax.lax.scan(one, None, (batched, wave_counts))
+            return outs, sides
+
+        return jax.jit(fused_wave, donate_argnums=(2,) if self.donate else ())
 
     def _program(self, compiled: CompiledModel,
                  tensors: Dict[str, jnp.ndarray]) -> tuple:
@@ -653,5 +710,78 @@ class FusedModelExecutor:
                 _bookkeep_kernel(k, codes, dens_x, dens_y, n_cc, self.model)
                 for k, (codes, dens_x, dens_y, _) in
                 zip(compiled.graph.topo_order(), sides)]
+        return outs, InferenceReport(reports, self.strategy,
+                                     fused_wall_seconds=wall)
+
+    # -- batched (multi-tenant) execution -----------------------------------
+    def run_batch(self, compiled: CompiledModel,
+                  shared: Dict[str, jnp.ndarray],
+                  batched: Dict[str, jnp.ndarray]
+                  ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
+        """One jitted call serving a WAVE of stacked inferences.
+
+        The multi-tenant entry point behind ``serving.graph_engine``:
+
+        * ``shared`` -- tensors common to every request of the wave (the
+          model weights), profiled once per tensor identity on the host
+          (same ``_input_profiles`` cache as ``run``, so steady-state waves
+          never re-profile them);
+        * ``batched`` -- per-request tensors stacked on a leading batch
+          axis (adjacency, features: ``(B, ...)``), profiled inside the
+          program and scanned over, each request planning its own K2P codes
+          from its own density profile through the same chained-writeback
+          walk as the single-inference program.
+
+        Returns ``(outs, report)`` where every entry of ``outs`` is stacked
+        ``(B, ...)`` and ``report`` is WAVE-level: ``fused_wall_seconds`` is
+        the one dispatch's wall clock, and (with ``collect_report=True``)
+        ``kernels`` holds per-request bookkeeping entries named
+        ``"{kernel}[b]"``.  With ``donate=True`` the stacked request buffers
+        are donated, so steady-state waves reuse them in place.  Programs
+        cache per (model structure, shared signature, wave signature) --
+        a serving engine that pads waves to a fixed slot count gets exactly
+        one trace per shape bucket.
+        """
+        n_cc = self.n_cc or compiled.partition.n_cc
+        flows = self._resolved_flows(compiled)
+        needed = self._needed_inputs(flows)
+        missing = [n for n, _ in needed
+                   if n not in shared and n not in batched]
+        if missing:
+            raise KeyError(f"wave inputs missing tensors: {missing}")
+        shared_needed = tuple((n, b) for n, b in needed if n in shared)
+        request_needed = tuple((n, b) for n, b in needed if n in batched)
+
+        key = ("wave", self._signature(compiled, shared),
+               self._tensor_sig(batched))
+        fn = self._programs.get(key)
+        if fn is not None:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            fn = self._build_batch(compiled, shared_needed, request_needed)
+            self._programs[key] = fn
+
+        shared_counts = self._input_counts(shared_needed, shared)
+        t0 = time.perf_counter()
+        outs, sides = fn(shared, shared_counts, batched)
+        jax.block_until_ready((outs, sides))
+        wall = time.perf_counter() - t0
+
+        topo = compiled.graph.topo_order()
+        self.profiled_densities = {
+            k.out: side[3] for k, side in zip(topo, sides)}   # (B, ...)
+        if self.keep_codes:
+            self.planned_codes = {
+                k.out: np.asarray(side[0]) for k, side in zip(topo, sides)}
+        reports = []
+        if self.collect_report:
+            b_sz = next(iter(batched.values())).shape[0]
+            for b in range(b_sz):
+                for k, (codes, dens_x, dens_y, _) in zip(topo, sides):
+                    rep = _bookkeep_kernel(k, codes[b], dens_x[b], dens_y[b],
+                                           n_cc, self.model)
+                    rep.name = f"{k.name}[{b}]"
+                    reports.append(rep)
         return outs, InferenceReport(reports, self.strategy,
                                      fused_wall_seconds=wall)

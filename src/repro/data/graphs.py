@@ -59,12 +59,20 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _powerlaw_marginal(n: int, rng: np.random.Generator,
-                       alpha: float = 1.6) -> np.ndarray:
-    """Normalized power-law block mass (heavy hubs first, shuffled)."""
+def powerlaw_marginal(n: int, rng: np.random.Generator,
+                      alpha: float = 1.6) -> np.ndarray:
+    """Normalized power-law block mass (heavy hubs first, shuffled).
+
+    Public: the serving engine's synthetic query stream
+    (`serving.graph_engine.random_requests`) draws per-request degree
+    structure from the same recipe as the dataset generators here.
+    """
     w = (np.arange(1, n + 1, dtype=np.float64)) ** (-alpha)
     rng.shuffle(w)
     return w / w.sum()
+
+
+_powerlaw_marginal = powerlaw_marginal       # internal callers' name
 
 
 def block_stats(name: str, n1: int, n2: int, *, seed: int = 0,
@@ -149,6 +157,23 @@ def _block_sizes(n: int, b: int) -> np.ndarray:
     return sizes
 
 
+def normalize_adjacency(a: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """``(A + I)`` under both aggregation normalizations.
+
+    Returns ``(a_gcn, a_mean)``: ``D^-1/2 (A+I) D^-1/2`` (GCN sum
+    aggregation) and ``D^-1 (A+I)`` (mean aggregation).  Self loops are
+    forced so every degree is >= 1.  Shared by :func:`materialize` and the
+    serving engine's per-request admission path (`serving.graph_engine`),
+    so a served graph is normalized exactly like a materialized one.
+    """
+    a = np.asarray(a, np.float32).copy()
+    np.fill_diagonal(a, 1.0)
+    deg = a.sum(1)
+    a_gcn = a / np.sqrt(np.outer(deg, deg))
+    a_mean = a / deg[:, None]
+    return a_gcn, a_mean
+
+
 @dataclasses.dataclass
 class DenseGraph:
     """Materialized small graph for real-numerics runs."""
@@ -185,9 +210,7 @@ def materialize(name: str, *, scale: float = 1.0, seed: int = 0,
     a[src, dst] = 1.0
     a[dst, src] = 1.0
     np.fill_diagonal(a, 1.0)
-    deg = a.sum(1)
-    a_gcn = a / np.sqrt(np.outer(deg, deg))
-    a_mean = a / deg[:, None]
+    a_gcn, a_mean = normalize_adjacency(a)
     col_skew = np.clip(
         spec.density_h0 * _cold_column_skew(f, rng, spec.density_h0), 0, 1)
     mask = rng.random((v, f)) < col_skew[None, :]

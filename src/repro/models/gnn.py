@@ -31,19 +31,40 @@ def make_model_spec(model: str, f_in: int, hidden: int, n_classes: int
     return GNNModelSpec(model, dims, agg_op=agg)
 
 
-def init_weights(compiled: CompiledModel, *, seed: int = 0,
-                 density: float = 1.0) -> Dict[str, np.ndarray]:
-    """Glorot weights for every Update kernel, magnitude-pruned to
-    ``density`` (paper Section VIII-B evaluates 0-90%+ weight sparsity)."""
+def _glorot_pruned(kernels, *, seed: int, density: float
+                   ) -> Dict[str, np.ndarray]:
     rng = np.random.default_rng(seed)
     out: Dict[str, np.ndarray] = {}
-    for k in compiled.graph.kernels:
+    for k in kernels:
         if k.kernel_type != KernelType.UPDATE or k.rhs in out:
             continue
         lim = np.sqrt(6.0 / (k.f_in + k.f_out))
         w = rng.uniform(-lim, lim, size=(k.f_in, k.f_out)).astype(np.float32)
         out[k.rhs] = graph_data.prune_weights(w, density, rng)
     return out
+
+
+def init_weights(compiled: CompiledModel, *, seed: int = 0,
+                 density: float = 1.0) -> Dict[str, np.ndarray]:
+    """Glorot weights for every Update kernel, magnitude-pruned to
+    ``density`` (paper Section VIII-B evaluates 0-90%+ weight sparsity)."""
+    return _glorot_pruned(compiled.graph.kernels, seed=seed, density=density)
+
+
+def init_spec_weights(spec: GNNModelSpec, *, seed: int = 0,
+                      density: float = 1.0) -> Dict[str, np.ndarray]:
+    """Weights for a model SPEC, independent of any concrete graph.
+
+    Weight shapes depend only on the layer dims, never on |V|, so a serving
+    engine shares ONE weight set across all of its shape buckets
+    (`serving.graph_engine.GraphServeEngine`).  Bitwise-identical to
+    :func:`init_weights` on any compile of the same spec: the kernel walk
+    (and hence the rng consumption order) is the graph builder's, which
+    does not look at the graph meta.
+    """
+    meta = GraphMeta(spec.model, 1, 1, spec.layer_dims[0])
+    graph = compiler.build_computation_graph(spec, meta)
+    return _glorot_pruned(graph.kernels, seed=seed, density=density)
 
 
 @dataclasses.dataclass

@@ -1,1 +1,2 @@
-"""Serving substrate: batched prefill/decode engine."""
+"""Serving substrate: batched LM prefill/decode engine (`serving.engine`)
+and the batched GNN graph-serving engine (`serving.graph_engine`)."""

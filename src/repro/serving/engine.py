@@ -75,12 +75,12 @@ class ServeEngine:
         logits = logits[:, : self.bundle.cfg.vocab_size]
         if self.temperature <= 0:
             return logits.argmax(-1).astype(np.int32)
+        # Gumbel-max: argmax(z + g) ~ Categorical(softmax(z)).  One
+        # vectorized draw for the whole batch (no softmax materialization,
+        # no per-row rng.choice loop); deterministic under rng_seed.
         z = logits / self.temperature
-        z = z - z.max(-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(-1, keepdims=True)
-        return np.array([self.rng.choice(p.shape[-1], p=row) for row in p],
-                        np.int32)
+        g = self.rng.gumbel(size=z.shape)
+        return (z + g).argmax(-1).astype(np.int32)
 
     def generate(self, requests: List[Request]) -> List[Result]:
         """Processes requests in admission waves of `slots`."""

@@ -28,6 +28,31 @@ def test_serve_engine_greedy_deterministic():
         assert a.tokens.max() < cfg.vocab_size
 
 
+def test_serve_engine_temperature_sampling_deterministic_under_seed():
+    """The vectorized (Gumbel-max) temperature sampler: same seed => same
+    tokens, different seed => different trajectory, all in-vocab."""
+    cfg = smoke_config("llama3.2-1b", n_layers=2)
+    bundle = model_zoo.build(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, size=(8,)).astype(
+        np.int32), max_new_tokens=8, request_id=i) for i in range(4)]
+
+    def generate(seed):
+        eng = ServeEngine(bundle, params, slots=4, max_seq=48,
+                          temperature=0.8, rng_seed=seed)
+        return eng.generate(list(reqs))
+
+    r1, r2, r3 = generate(7), generate(7), generate(8)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert len(a.tokens) == 8 and a.tokens.max() < cfg.vocab_size
+    # 32 sampled tokens at T=0.8: a seed collision is astronomically
+    # unlikely -- a failure here means the sampler ignores its rng
+    assert any(not np.array_equal(a.tokens, c.tokens)
+               for a, c in zip(r1, r3))
+
+
 def test_serve_engine_waves_exceed_slots():
     cfg = smoke_config("llama3.2-1b", n_layers=2)
     bundle = model_zoo.build(cfg)

@@ -38,10 +38,25 @@ PUBLIC = [
     ("repro.core.analyzer", ["plan_codes", "plan_codes_from_profiles",
                              "STRATEGIES"]),
     ("repro.core.profiler", ["BlockProfile", "SparsityStats",
-                             "block_density", "block_counts"]),
+                             "block_density", "block_counts",
+                             "batched_block_counts"]),
     ("repro.core.ir", ["OperandFlow", "ComputationGraph"]),
     ("repro.serving.engine", ["ServeEngine"]),
-    ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS"]),
+    # the serving surface DESIGN 10 / README "Serving a stream of graphs"
+    # lean on; run_batch is the executor's multi-tenant entry point
+    ("repro.serving.graph_engine", ["GraphServeEngine", "GraphRequest",
+                                    "GraphResult", "random_requests"]),
+    ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS",
+                          "init_spec_weights"]),
+    ("repro.data.graphs", ["normalize_adjacency", "materialize"]),
+]
+
+# bound methods the docs name explicitly (an attribute rename must break
+# CI, not the reader)
+PUBLIC_ATTRS = [
+    ("repro.core.runtime", "FusedModelExecutor", ["run", "run_batch"]),
+    ("repro.serving.graph_engine", "GraphServeEngine",
+     ["serve", "run_naive", "bucket_for"]),
 ]
 
 
@@ -83,6 +98,15 @@ def check_imports(errors: list) -> None:
         for name in names:
             if not hasattr(m, name):
                 errors.append(f"public surface: {mod}.{name} is gone")
+    for mod, cls, attrs in PUBLIC_ATTRS:
+        try:
+            obj = getattr(importlib.import_module(mod), cls)
+        except (ImportError, AttributeError) as e:
+            errors.append(f"public surface: {mod}.{cls} is gone ({e})")
+            continue
+        for attr in attrs:
+            if not hasattr(obj, attr):
+                errors.append(f"public surface: {mod}.{cls}.{attr} is gone")
 
 
 def main() -> int:
