@@ -9,18 +9,29 @@ hence its own density profile):
   dispatch chain + host bookkeeping per request, no batching;
 * **served** -- ``GraphServeEngine.serve``: shape-bucketed admission waves
   through the batched fused program (one jitted dispatch per wave,
-  profile-chained K2P planning, no per-request host bookkeeping).
+  profile-chained K2P planning, no per-request host bookkeeping);
+* **continuous** -- ``serving.scheduler.ContinuousGraphServer`` over the
+  same engine, fed by an ARRIVAL PROCESS: Poisson arrivals at
+  ``--load`` x the engine's measured wave capacity, each request carrying
+  an absolute deadline.  Measures per-request sojourn latency
+  (arrival -> wave completion), deadline hit-rate, and throughput over the
+  busy span, against the synchronous ``serve`` baseline on the SAME
+  request set (DESIGN.md section 11).
 
 Per engine: p50/p99 per-request latency (a served request's latency is its
 wave's wall clock -- requests share the dispatch) and aggregate throughput
 (requests/s).  Timing is best-of-N with the two engines interleaved per
 round, same rationale as ``bench_engine``.  ``BENCH_serving.json`` carries
-the serving perf trajectory; ``--smoke`` is the CI gate (bitwise
-served-vs-naive parity + a loose throughput floor) and writes
-``BENCH_serving.smoke.json`` for the workflow artifact.
+the serving perf trajectory (sync rows + a continuous row per model);
+``--smoke`` is the CI gate (bitwise served-vs-naive parity + a loose
+throughput floor) and writes ``BENCH_serving.smoke.json`` for the workflow
+artifact; ``--smoke --continuous`` additionally gates continuous-vs-naive
+parity, the deadline hit-rate floor, and continuous throughput vs sync,
+writing ``BENCH_serving.continuous.smoke.json`` alongside.
 
   PYTHONPATH=src python -m benchmarks.run --only serving
-  PYTHONPATH=src python -m benchmarks.bench_serving --smoke   # CI gate
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke              # CI gate
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke --continuous # + online gate
 """
 from __future__ import annotations
 
@@ -35,9 +46,11 @@ import numpy as np
 
 from benchmarks.common import emit, geomean
 from repro.serving.graph_engine import GraphServeEngine, random_requests
+from repro.serving.scheduler import ContinuousGraphServer
 
 _OUT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
 _SMOKE_OUT = _OUT.with_name("BENCH_serving.smoke.json")
+_CONT_SMOKE_OUT = _OUT.with_name("BENCH_serving.continuous.smoke.json")
 
 F_IN = 64
 SIZES = (56, 100, 150)            # -> buckets 64, 128, 256
@@ -121,6 +134,140 @@ def _bench_model(model: str, n_requests: int, slots: int, rounds: int
     return row
 
 
+def _replay_continuous(eng: GraphServeEngine, reqs, arrivals, budget: float):
+    """Open-loop arrival replay: submit each request when the wall clock
+    passes its Poisson arrival time (deadline = arrival + ``budget``),
+    polling the scheduler in between; drain flushes the tail once the
+    stream ends.  Returns (results, per-request sojourn latencies,
+    hit-rate, busy-span seconds)."""
+    srv = ContinuousGraphServer(eng)
+    t0 = time.monotonic()
+    abs_arrival = t0 + np.asarray(arrivals)
+    n, i, done = len(reqs), 0, []
+    while i < n:
+        now = time.monotonic()
+        while i < n and abs_arrival[i] <= now:
+            srv.submit(reqs[i], deadline=float(abs_arrival[i]) + budget)
+            i += 1
+        got = srv.poll()                     # full/deadline/age cuts stream
+        done += got
+        if not got:
+            # nothing cuttable yet: a short bounded sleep instead of a
+            # busy spin (which would compete with the dispatches we time)
+            time.sleep(min(max(abs_arrival[i] - time.monotonic(), 0.0),
+                           1e-3) if not srv.pending else 5e-4)
+    done += srv.drain()                      # end of stream: flush the tail
+    by_arrival = {r.request_id: a for r, a in zip(reqs, abs_arrival)}
+    lat = [r.completed_at - by_arrival[r.request_id] for r in done]
+    hits = [bool(r.deadline_met) for r in done]
+    span = max(r.completed_at for r in done) - t0      # from stream start
+    return done, lat, float(np.mean(hits)), float(span)
+
+
+def _bench_continuous(model: str, n_requests: int, slots: int, rounds: int,
+                      load: float, budget_factor: float) -> dict:
+    """Continuous-vs-sync ladder for one model, same request SET and same
+    arrival PROCESS for both paths.
+
+    The engine is warmed (compile + trace + wall samples) by a sync serve;
+    ``serve_wall`` (best-of-rounds) is the pure batch-service time and the
+    capacity estimate.  The Poisson stream arrives at ``load`` x that
+    capacity; each request's deadline is ``budget_factor`` x the batch
+    service span past its arrival.  The synchronous baseline serving the
+    SAME stream must gather the whole batch before ``serve`` can admit it
+    (PR-3's engine is batch-synchronous by construction), so its stream
+    span is ``last_arrival + serve_wall``; the continuous scheduler
+    overlaps arrival with service, which is exactly the win this row
+    measures.  ``sync_service_throughput_rps`` keeps the arrival-free
+    batch number for reference."""
+    reqs = random_requests(n_requests, f_in=F_IN, sizes=SIZES, seed=7)
+    eng = GraphServeEngine(model, f_in=F_IN, hidden=16, n_classes=7,
+                           slots=slots, weight_seed=0)
+    eng.serve(reqs)                          # warm: compile + trace + walls
+    serve_wall = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        serve_wall = min(serve_wall, time.perf_counter() - t0)
+    capacity = n_requests / serve_wall       # measured, incl. fragmentation
+    rate = load * capacity
+    budget = budget_factor * serve_wall
+    best = None
+    for r in range(rounds):
+        rng = np.random.default_rng(100 + r)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+        results, lat, hit_rate, span = _replay_continuous(
+            eng, reqs, arrivals, budget)
+        assert len(results) == n_requests
+        sync_span = float(arrivals[-1]) + serve_wall   # gather, then serve
+        if best is None or span < best[2]:
+            best = (lat, hit_rate, span, sync_span)
+    lat, hit_rate, span, sync_span = best
+    row = {
+        "mode": "continuous", "model": model, "n_requests": n_requests,
+        "slots": slots, "load": load, "budget_factor": budget_factor,
+        "deadline_budget_ms": budget * 1e3,
+        "arrival_rate_rps": rate,
+        "deadline_hit_rate": hit_rate,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "throughput_rps": n_requests / span,
+        "sync_stream_throughput_rps": n_requests / sync_span,
+        "sync_service_throughput_rps": capacity,
+    }
+    row["throughput_vs_sync"] = (row["throughput_rps"]
+                                 / row["sync_stream_throughput_rps"])
+    emit(f"serving.continuous.{model}", row["p50_ms"] * 1e3,
+         f"hit_rate={hit_rate:.2f} p99={row['p99_ms']:.2f}ms "
+         f"throughput={row['throughput_rps']:.1f}rps "
+         f"({row['throughput_vs_sync']:.2f}x sync gather+serve)")
+    return row
+
+
+def _continuous_parity(model: str) -> None:
+    """Continuous-vs-naive bitwise parity on a fresh engine, under an
+    actual arrival replay (the --smoke --continuous correctness half)."""
+    reqs = random_requests(6, f_in=F_IN, sizes=SIZES[:2], seed=13)
+    eng = GraphServeEngine(model, f_in=F_IN, hidden=16, n_classes=7, slots=3)
+    srv = ContinuousGraphServer(eng, max_wait=0.01)
+    done = []
+    for r in reqs:
+        srv.submit(r, deadline=time.monotonic() + 60.0)
+        done += srv.poll()
+    while srv.pending:
+        done += srv.drain()
+    naive = {r.request_id: r for r in eng.run_naive(reqs)}
+    for got in done:
+        if not np.array_equal(got.logits, naive[got.request_id].logits):
+            sys.exit(f"continuous parity FAILED: {model} request "
+                     f"{got.request_id} differs from per-request engine")
+    if eng.executor.trace_count > len(eng.buckets):
+        sys.exit(f"continuous trace regression: {eng.executor.trace_count} "
+                 f"traces for {len(eng.buckets)} buckets")
+    emit(f"serving.continuous.parity.{model}", 0.0,
+         f"{len(reqs)} requests bitwise OK, "
+         f"{eng.executor.trace_count} traces / {len(eng.buckets)} buckets")
+
+
+def _scale(smoke: bool, fast: bool) -> tuple:
+    """(models, n_requests, rounds) for the sync AND continuous ladders --
+    one source of truth so the smoke artifact's metadata can't drift from
+    the measurements."""
+    if smoke:
+        return ("gcn",), 8, 2
+    if fast:
+        return ("gcn", "sage"), 16, 3
+    return ("gcn", "sage", "gin", "sgc"), 16, 3
+
+
+def run_continuous(fast: bool = True, *, smoke: bool = False,
+                   load: float = 2.0, budget_factor: float = 2.0) -> list:
+    """Continuous-mode rows (one per model); smoke = gcn only."""
+    models, n_requests, rounds = _scale(smoke, fast)
+    return [_bench_continuous(m, n_requests, 4, rounds, load, budget_factor)
+            for m in models]
+
+
 def _parity(model: str) -> None:
     """Bitwise served-vs-naive parity on a fresh engine (the smoke gate's
     correctness half; the full per-model sweep lives in tests)."""
@@ -136,13 +283,9 @@ def _parity(model: str) -> None:
 
 
 def run(fast: bool = True, *, smoke: bool = False,
-        write_json: bool = True) -> list:
-    if smoke:
-        models, n_requests, rounds = ("gcn",), 8, 2
-    elif fast:
-        models, n_requests, rounds = ("gcn", "sage"), 16, 3
-    else:
-        models, n_requests, rounds = ("gcn", "sage", "gin", "sgc"), 16, 3
+        write_json: bool = True, continuous: bool = True,
+        load: float = 2.0, budget_factor: float = 2.0) -> list:
+    models, n_requests, rounds = _scale(smoke, fast)
     slots = 4
     rows = [_bench_model(m, n_requests, slots, rounds) for m in models]
     gm = geomean(r["throughput_speedup"] for r in rows)
@@ -153,13 +296,30 @@ def run(fast: bool = True, *, smoke: bool = False,
         "rows": rows,
         "geomean_throughput_speedup": gm,
     }
+    if continuous:
+        payload["continuous_rows"] = run_continuous(
+            fast, smoke=smoke, load=load, budget_factor=budget_factor)
     if write_json:
         _OUT.write_text(json.dumps(payload, indent=2) + "\n")
     if smoke:
-        _SMOKE_OUT.write_text(json.dumps(payload, indent=2) + "\n")
+        # one smoke invocation produces BOTH workflow artifacts: the sync
+        # rows and (with --continuous) the continuous rows, separately,
+        # so the CI serving job runs the bench exactly once
+        sync_payload = {k: v for k, v in payload.items()
+                        if k != "continuous_rows"}
+        _SMOKE_OUT.write_text(json.dumps(sync_payload, indent=2) + "\n")
+        if continuous:
+            cont_payload = {
+                "bench": "continuous deadline-aware serving vs sync "
+                         "gather+serve",
+                "device": payload["device"], "rounds": rounds,
+                "rows": payload["continuous_rows"],
+            }
+            _CONT_SMOKE_OUT.write_text(
+                json.dumps(cont_payload, indent=2) + "\n")
     emit("serving.geomean_throughput_speedup", 0.0,
          f"{gm:.2f}x -> {(_SMOKE_OUT if smoke else _OUT).name}")
-    return rows
+    return rows + payload.get("continuous_rows", [])
 
 
 if __name__ == "__main__":
@@ -170,18 +330,54 @@ if __name__ == "__main__":
                          "(workflow artifact) instead of BENCH_serving.json")
     ap.add_argument("--full", action="store_true",
                     help="all four models")
+    ap.add_argument("--continuous", action="store_true",
+                    help="with --smoke: gate the continuous scheduler too "
+                         "(bitwise continuous-vs-naive parity, deadline "
+                         "hit-rate floor, throughput vs sync serve) and "
+                         "write BENCH_serving.continuous.smoke.json")
     ap.add_argument("--tol", type=float, default=1.5,
                     help="throughput gate: fail if served throughput < tol "
                          "x naive.  Default asserts the headline batching "
                          "win on a quiet machine; CI's shared runners pass "
                          "a looser value that still catches the "
                          "batching-does-more-work regression class")
+    ap.add_argument("--hit-floor", type=float, default=0.9,
+                    help="continuous gate: fail if deadline hit-rate < floor "
+                         "at the default load")
+    ap.add_argument("--cont-tol", type=float, default=1.0,
+                    help="continuous gate: fail if continuous throughput < "
+                         "tol x the synchronous serve path.  CI's shared "
+                         "runners pass a looser value (timing noise); the "
+                         "default asserts continuous keeps up with sync on "
+                         "a quiet machine")
+    ap.add_argument("--load", type=float, default=2.0,
+                    help="continuous offered load as a multiple of the "
+                         "measured wave capacity (>1 keeps the queue busy)")
+    ap.add_argument("--budget-factor", type=float, default=2.0,
+                    help="deadline budget as a multiple of the expected "
+                         "full-service span")
     args = ap.parse_args()
     if args.smoke:
         _parity("gcn")
+        if args.continuous:
+            _continuous_parity("gcn")
     bench_rows = run(fast=not args.full, smoke=args.smoke,
-                     write_json=not args.smoke)
-    slow = [r for r in bench_rows if r["throughput_speedup"] < args.tol]
+                     write_json=not args.smoke,
+                     continuous=args.continuous or not args.smoke,
+                     load=args.load, budget_factor=args.budget_factor)
+    sync_rows = [r for r in bench_rows if "throughput_speedup" in r]
+    cont_rows = [r for r in bench_rows if r.get("mode") == "continuous"]
+    slow = [r for r in sync_rows if r["throughput_speedup"] < args.tol]
     if slow:
         sys.exit(f"served throughput below {args.tol}x naive: "
                  f"{[(r['model'], round(r['throughput_speedup'], 2)) for r in slow]}")
+    missed = [r for r in cont_rows
+              if r["deadline_hit_rate"] < args.hit_floor]
+    if missed:
+        sys.exit(f"continuous deadline hit-rate below {args.hit_floor}: "
+                 f"{[(r['model'], round(r['deadline_hit_rate'], 3)) for r in missed]}")
+    lagging = [r for r in cont_rows
+               if r["throughput_vs_sync"] < args.cont_tol]
+    if lagging:
+        sys.exit(f"continuous throughput below {args.cont_tol}x sync serve: "
+                 f"{[(r['model'], round(r['throughput_vs_sync'], 2)) for r in lagging]}")

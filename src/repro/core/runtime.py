@@ -76,6 +76,13 @@ class InferenceReport:
     # set by the fused whole-model executor: the single program's wall time
     # (per-kernel walls are unobservable inside one XLA program).
     fused_wall_seconds: Optional[float] = None
+    # per-wave plumbing (set on the batched serving path): the dispatched
+    # wave's batch width, and -- filled in by the admission layer, which is
+    # the only place that knows real from dummy -- how many of those slots
+    # carried real requests.  The continuous scheduler's EWMA wave-wall
+    # estimator and the serving benchmarks read these.
+    wave_slots: Optional[int] = None
+    wave_real: Optional[int] = None
 
     @property
     def total_cycles(self) -> float:
@@ -774,9 +781,9 @@ class FusedModelExecutor:
         if self.keep_codes:
             self.planned_codes = {
                 k.out: np.asarray(side[0]) for k, side in zip(topo, sides)}
+        b_sz = int(next(iter(batched.values())).shape[0])
         reports = []
         if self.collect_report:
-            b_sz = next(iter(batched.values())).shape[0]
             for b in range(b_sz):
                 for k, (codes, dens_x, dens_y, _) in zip(topo, sides):
                     rep = _bookkeep_kernel(k, codes[b], dens_x[b], dens_y[b],
@@ -784,4 +791,5 @@ class FusedModelExecutor:
                     rep.name = f"{k.name}[{b}]"
                     reports.append(rep)
         return outs, InferenceReport(reports, self.strategy,
-                                     fused_wall_seconds=wall)
+                                     fused_wall_seconds=wall,
+                                     wave_slots=b_sz)

@@ -1,2 +1,3 @@
-"""Serving substrate: batched LM prefill/decode engine (`serving.engine`)
-and the batched GNN graph-serving engine (`serving.graph_engine`)."""
+"""Serving substrate: batched LM prefill/decode engine (`serving.engine`),
+the batched GNN graph-serving engine (`serving.graph_engine`), and the
+continuous deadline-aware scheduler over it (`serving.scheduler`)."""

@@ -78,6 +78,18 @@ class GraphResult:
     logits: np.ndarray              # (n, n_classes), padding rows sliced off
     bucket: int                     # padded vertex count the wave ran at
     wave: int                       # admission wave index (diagnostics)
+    # continuous-serving metadata (serving.scheduler fills these in;
+    # the synchronous serve()/run_naive() paths leave them None)
+    deadline: Optional[float] = None      # absolute clock deadline, if any
+    completed_at: Optional[float] = None  # clock time the wave finished
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """True/False under the continuous scheduler; None when the result
+        came from a path with no deadline accounting."""
+        if self.deadline is None or self.completed_at is None:
+            return None
+        return self.completed_at <= self.deadline
 
 
 def random_requests(n_requests: int, *, f_in: int,
@@ -176,9 +188,37 @@ class GraphServeEngine:
         self.waves = 0
         self.served = 0
         self.wave_walls: List[float] = []
+        # per-bucket dispatch walls: what the continuous scheduler's EWMA
+        # wave-wall estimator seeds from (DESIGN.md section 11)
+        self.bucket_walls: Dict[int, List[float]] = {}
+        self.last_wave_report: Optional[runtime.InferenceReport] = None
 
     # -- admission ----------------------------------------------------------
     def _validate(self, req: GraphRequest) -> None:
+        for name, arr in (("adjacency", req.adjacency),
+                          ("features", req.features)):
+            a = np.asarray(arr)
+            # admission casts to float32; anything that can't carry graph
+            # numerics safely (complex, object, strings, ...) is rejected
+            # here rather than exploding -- or worse, silently casting --
+            # inside normalize_adjacency.
+            if not (np.issubdtype(a.dtype, np.floating)
+                    or np.issubdtype(a.dtype, np.integer)
+                    or a.dtype == np.bool_):
+                raise ValueError(
+                    f"request {req.request_id}: {name} dtype {a.dtype} is "
+                    f"not numeric (float/int/bool)")
+            # NaN/inf would flow through normalize_adjacency's degree sums
+            # and poison every request sharing the wave.
+            if (np.issubdtype(a.dtype, np.floating)
+                    and not np.isfinite(a).all()):
+                raise ValueError(
+                    f"request {req.request_id}: {name} contains non-finite "
+                    f"values (NaN/inf)")
+        if req.features.ndim != 2:
+            raise ValueError(
+                f"request {req.request_id}: features must be 2-D "
+                f"(n_vertices, f_in), got shape {req.features.shape}")
         if req.features.shape[1] != self.f_in:
             raise ValueError(
                 f"request {req.request_id}: feature width "
@@ -249,42 +289,88 @@ class GraphServeEngine:
         return {name: np.zeros(self._input_shape(name, bucket), np.float32)
                 for name in self._input_names[bucket]}
 
+    def cut_wave(self, entries: Sequence, *, force: bool = False
+                 ) -> Tuple[list, list]:
+        """Cut at most one wave off the front of a FIFO of entries.
+
+        Returns ``(wave, rest)``: the first ``slots`` entries when a full
+        wave is available; the whole (short) remainder when ``force`` is set
+        (a deadline-, age-, or drain-triggered partial wave); otherwise an
+        empty wave and ``entries`` unchanged.  Pure -- the synchronous
+        ``serve`` and the continuous scheduler share it, so every admission
+        property (wave size <= slots, each request in exactly one wave)
+        is pinned once.
+        """
+        entries = list(entries)
+        if len(entries) >= self.slots:
+            return entries[: self.slots], entries[self.slots:]
+        if force and entries:
+            return entries, []
+        return [], entries
+
     def _admit(self, requests: Sequence[GraphRequest]
                ) -> Dict[int, List[List[Tuple[int, GraphRequest]]]]:
-        """Group by bucket (first-seen order), then split into waves of at
-        most ``slots`` requests each."""
+        """Group by bucket (first-seen order), then cut into waves of at
+        most ``slots`` requests each (trailing partial waves forced)."""
         by_bucket: Dict[int, List[Tuple[int, GraphRequest]]] = {}
         for idx, req in enumerate(requests):
             self._validate(req)
             by_bucket.setdefault(self.bucket_for(req.n_vertices), []
                                  ).append((idx, req))
-        return {bucket: [entries[i: i + self.slots]
-                         for i in range(0, len(entries), self.slots)]
-                for bucket, entries in by_bucket.items()}
+        out: Dict[int, List[List[Tuple[int, GraphRequest]]]] = {}
+        for bucket, entries in by_bucket.items():
+            waves = []
+            while entries:
+                wave, entries = self.cut_wave(entries, force=True)
+                waves.append(wave)
+            out[bucket] = waves
+        return out
 
     # -- execution ----------------------------------------------------------
+    def dispatch_wave(self, bucket: int, wave: Sequence[GraphRequest]
+                      ) -> List[GraphResult]:
+        """Execute one admission wave: pad each request to ``bucket``, fill
+        the remaining slots with zero dummies, run ONE batched fused
+        dispatch, and slice per-request results back out (wave order).
+
+        This is the reusable backend step behind both :meth:`serve` and the
+        continuous scheduler (``serving.scheduler.ContinuousGraphServer``);
+        it owns the serving counters (``waves``/``served``/``wave_walls``/
+        ``bucket_walls``) and stamps the wave's real-slot count into the
+        report (``last_wave_report.wave_real``).
+        """
+        if not 0 < len(wave) <= self.slots:
+            raise ValueError(
+                f"wave of {len(wave)} requests (engine slots={self.slots})")
+        cm = self._compile(bucket)
+        final = cm.graph.kernels[-1].out
+        padded = [self._padded(req, bucket) for req in wave]
+        padded += [self._zero_tensors(bucket)] * (self.slots - len(wave))
+        batched = {name: jnp.asarray(np.stack([p[name] for p in padded]))
+                   for name in self._input_names[bucket]}
+        outs, rep = self.executor.run_batch(cm, self.weights, batched)
+        rep.wave_real = len(wave)
+        self.last_wave_report = rep
+        arr = np.asarray(outs[final])
+        results = [GraphResult(req.request_id, arr[slot, : req.n_vertices],
+                               bucket, self.waves)
+                   for slot, req in enumerate(wave)]
+        self.waves += 1
+        self.served += len(wave)
+        self.wave_walls.append(rep.fused_wall_seconds)
+        self.bucket_walls.setdefault(bucket, []).append(
+            rep.fused_wall_seconds)
+        return results
+
     def serve(self, requests: Sequence[GraphRequest]) -> List[GraphResult]:
         """Serve a batch of queries; results in request order."""
         results: List[Optional[GraphResult]] = [None] * len(requests)
         for bucket, waves in self._admit(requests).items():
-            cm = self._compile(bucket)
-            final = cm.graph.kernels[-1].out
             for wave in waves:
-                padded = [self._padded(req, bucket) for _, req in wave]
-                padded += [self._zero_tensors(bucket)
-                           ] * (self.slots - len(wave))
-                batched = {name: jnp.asarray(
-                    np.stack([p[name] for p in padded]))
-                    for name in self._input_names[bucket]}
-                outs, rep = self.executor.run_batch(cm, self.weights, batched)
-                arr = np.asarray(outs[final])
-                for slot, (idx, req) in enumerate(wave):
-                    results[idx] = GraphResult(
-                        req.request_id, arr[slot, : req.n_vertices],
-                        bucket, self.waves)
-                self.waves += 1
-                self.served += len(wave)
-                self.wave_walls.append(rep.fused_wall_seconds)
+                wave_results = self.dispatch_wave(
+                    bucket, [req for _, req in wave])
+                for (idx, _), res in zip(wave, wave_results):
+                    results[idx] = res
         return results  # type: ignore[return-value]
 
     def run_naive(self, requests: Sequence[GraphRequest]

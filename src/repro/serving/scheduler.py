@@ -1,0 +1,343 @@
+"""Continuous deadline-aware GNN serving: queue -> cut -> pack -> stream.
+
+The batched :class:`~repro.serving.graph_engine.GraphServeEngine` admits a
+*synchronous* batch: every request is present up front, waves are cut per
+bucket, results come back when the whole batch is done.  A deployed GNN
+service sees none of that -- queries ARRIVE over time (the paper's runtime
+profiles each arriving graph and re-plans per input; Algorithm 8's task
+queue is fed continuously), carry latency expectations, and want their
+result the moment their wave completes.  :class:`ContinuousGraphServer` is
+that online layer (DESIGN.md section 11):
+
+* **Time-ordered queue.**  :meth:`submit` validates a request, assigns it
+  to its shape bucket, and appends it (with its arrival time and optional
+  absolute deadline) to the bucket's FIFO.  Nothing executes at submit
+  time; :meth:`poll` is the scheduler tick.
+
+* **Deadline-aware wave cutting.**  A bucket's queue is cut the moment a
+  full wave of ``slots`` requests is available (reason ``"full"``).  A
+  *partial* wave is cut early when some queued request can no longer
+  afford to wait: the TIGHTEST queued deadline's slack
+  (``deadline - now``; a forced cut takes the whole sub-slots queue, so
+  FIFO position must not starve a tight deadline behind a loose one) has
+  dropped to within the bucket's estimated WAIT BOUND (reason
+  ``"deadline"``), or the oldest request has waited ``max_wait``
+  regardless of deadline (reason ``"age"`` -- the starvation-freedom
+  backstop for deadline-less traffic).  The wait bound
+  is the bucket's estimated wave wall PLUS one estimated wave from every
+  other bucket with queued work (the dispatch lane is serial, and those
+  buckets' waves may cut in the same tick and go first), scaled by
+  ``slack_margin``; per-bucket wave-wall estimates are an EWMA over
+  observed dispatch walls, cold-started from the engine's recorded
+  ``bucket_walls``/``wave_walls`` (or ``cold_start_wall`` when the bucket
+  has never run).  The age cut fires after
+  ``min(max_wait, batch_patience * estimate)``: waiting longer than a
+  wave costs to run cannot be amortized by a fuller wave, so batching
+  patience adapts to the bucket's measured wall instead of idling on a
+  fixed timer.
+
+* **Cross-bucket packing.**  All waves cut in one tick are ordered by
+  ``core.scheduler.schedule_lpt`` over their estimated walls -- the
+  Analyzer-predicted-cost LPT policy the engine already uses for task
+  bins, applied at wave granularity -- with deadline/age-triggered waves
+  promoted ahead of full ones.  Every cut wave dispatches within the same
+  tick, so large buckets can never starve small ones (or vice versa); LPT
+  just fixes a deterministic, longest-first launch order.
+
+* **Slot-level result streaming.**  Results surface per request as each
+  wave completes: :meth:`poll` returns the newly finished
+  :class:`~repro.serving.graph_engine.GraphResult` objects (stamped with
+  ``completed_at`` and their ``deadline``), not a batch-final list.
+  :meth:`drain` force-cuts everything left and flushes the stream.
+
+The clock is injectable (``clock=``, default ``time.monotonic``) so the
+whole policy runs deterministically under a fake clock in tests
+(``tests/test_continuous_serving.py``); numerics never depend on it --
+continuous results are bitwise-identical to
+``GraphServeEngine.run_naive`` on the same requests whatever the arrival
+order, deadlines, or clock jitter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import scheduler as core_scheduler
+from repro.serving.graph_engine import (GraphRequest, GraphResult,
+                                        GraphServeEngine)
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """One queue entry: the request plus its admission-time metadata."""
+
+    seq: int                        # submission order (ticket id)
+    request: GraphRequest
+    bucket: int
+    arrival: float                  # clock time at submit
+    deadline: Optional[float]       # ABSOLUTE clock deadline (None = none)
+
+
+@dataclasses.dataclass
+class WaveLog:
+    """Dispatch-log entry: one cut wave, why it was cut, what it cost."""
+
+    bucket: int
+    n_real: int                     # real (non-dummy) requests in the wave
+    reason: str                     # "full" | "deadline" | "age" | "drain"
+    cut_at: float                   # clock time the cut decision was made
+    wall: float                     # dispatch wall seconds (engine-measured)
+
+
+class _EwmaWall:
+    """Per-bucket EWMA wave-wall estimate with explicit cold start.
+
+    ``observe`` folds each measured dispatch wall in with weight ``alpha``;
+    before the first observation the estimate comes from the seed (the
+    MINIMUM of the engine's recorded walls: dispatch walls are bounded
+    below by the true compute and their outliers -- the first wave's
+    trace, host scheduling noise -- are always upward, so min is the
+    steady-state proxy) or ``cold_start`` when the bucket never ran.
+    """
+
+    def __init__(self, alpha: float, seed: Optional[float],
+                 cold_start: float):
+        self.alpha = alpha
+        self.value = cold_start if seed is None else float(seed)
+
+    def observe(self, wall: float) -> None:
+        self.value += self.alpha * (float(wall) - self.value)
+
+
+class ContinuousGraphServer:
+    """Deadline-aware online scheduler over a :class:`GraphServeEngine`.
+
+    >>> eng = GraphServeEngine("gcn", f_in=64, n_classes=7, slots=4)
+    >>> srv = ContinuousGraphServer(eng)
+    >>> srv.submit(req, deadline=srv.clock() + 0.05)
+    0
+    >>> done = srv.poll()          # dispatches any cuttable waves
+    >>> tail = srv.drain()         # force-flush at shutdown
+
+    Contracts:
+
+    * every submitted request is dispatched in exactly one wave of at most
+      ``engine.slots`` requests, eventually (starvation-freedom: full cut,
+      deadline cut, ``max_wait`` age cut, or :meth:`drain`);
+    * results are bitwise-identical to ``engine.run_naive`` on the same
+      requests -- arrival order, deadlines, and clock behavior select wave
+      composition, never numerics -- and ``engine.executor.trace_count``
+      still grows by at most one per shape bucket;
+    * within one :meth:`poll` tick, cut waves dispatch in LPT order over
+      the per-bucket EWMA wall estimates (urgent deadline/age cuts first);
+    * ``dispatch_log`` records every wave (bucket, real slots, cut reason,
+      measured wall) for tests and observability.
+
+    ``slack_margin`` scales the wait bound in the slack comparison (>1
+    cuts earlier; the default 1.5 buys headroom against wall variance and
+    the host-side padding cost the device wall doesn't see).
+    """
+
+    def __init__(self, engine: GraphServeEngine, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 ewma_alpha: float = 0.25,
+                 cold_start_wall: float = 0.05,
+                 slack_margin: float = 1.5,
+                 batch_patience: float = 1.0,
+                 max_wait: float = 0.25):
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError(f"ewma_alpha {ewma_alpha} not in (0, 1]")
+        self.engine = engine
+        self.clock = clock
+        self.ewma_alpha = ewma_alpha
+        self.cold_start_wall = cold_start_wall
+        self.slack_margin = slack_margin
+        self.batch_patience = batch_patience
+        self.max_wait = max_wait
+        self._queues: Dict[int, List[QueuedRequest]] = {}
+        self._ewma: Dict[int, _EwmaWall] = {}
+        self._seq = 0
+        self.dispatch_log: List[WaveLog] = []
+        self.submitted = 0
+        self.dispatched = 0
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, request: GraphRequest,
+               deadline: Optional[float] = None) -> int:
+        """Enqueue one request; returns its ticket (submission sequence).
+
+        ``deadline`` is an ABSOLUTE time on this server's clock (pass
+        ``srv.clock() + budget``); ``None`` means best-effort -- the
+        request still dispatches within ``max_wait`` of arrival.  The
+        request is validated here (malformed input must fail at the
+        admission edge, not poison a wave later).
+        """
+        self.engine._validate(request)
+        bucket = self.engine.bucket_for(request.n_vertices)
+        ticket = self._seq
+        self._seq += 1
+        self._queues.setdefault(bucket, []).append(QueuedRequest(
+            ticket, request, bucket, self.clock(), deadline))
+        self.submitted += 1
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        """Requests queued but not yet dispatched."""
+        return sum(len(q) for q in self._queues.values())
+
+    def estimate(self, bucket: int) -> float:
+        """Current EWMA wave-wall estimate for ``bucket`` (seconds)."""
+        return self._ewma_for(bucket).value
+
+    def _ewma_for(self, bucket: int) -> _EwmaWall:
+        est = self._ewma.get(bucket)
+        if est is None:
+            own = self.engine.bucket_walls.get(bucket)
+            if own:
+                seed = float(np.min(own))
+            elif self.engine.wave_walls:
+                # never-run bucket: other buckets' walls are the wrong
+                # scale (a small bucket's wall would UNDERestimate a large
+                # one and defer its deadline cuts past rescue), so clamp
+                # the cross-bucket fallback to at least cold_start_wall
+                seed = max(float(np.min(self.engine.wave_walls)),
+                           self.cold_start_wall)
+            else:
+                seed = None
+            est = _EwmaWall(self.ewma_alpha, seed, self.cold_start_wall)
+            self._ewma[bucket] = est
+        return est
+
+    # -- wave cutting -------------------------------------------------------
+    def wait_bound(self, bucket: int) -> float:
+        """Worst-case wait (seconds) for a wave cut from ``bucket`` NOW:
+        its own estimated wall plus one estimated wave from every OTHER
+        bucket with queued work -- the dispatch lane is serial and those
+        buckets may cut in the same tick and be packed first -- scaled by
+        ``slack_margin``."""
+        bound = self.estimate(bucket)
+        for b, q in self._queues.items():
+            if b != bucket and q:
+                bound += self.estimate(b)
+        return bound * self.slack_margin
+
+    def _cut_reason(self, bucket: int, queue: List[QueuedRequest],
+                    now: float) -> Optional[str]:
+        """Why the FRONT of ``queue`` should be cut right now, if at all."""
+        if not queue:
+            return None
+        if len(queue) >= self.engine.slots:
+            return "full"
+        oldest = queue[0]
+        # a forced cut takes the whole (sub-slots) queue, so deadline
+        # pressure from ANY queued request -- not just the head -- cuts:
+        # a tight deadline queued behind a loose one must not be starved
+        # by FIFO position.
+        deadlines = [e.deadline for e in queue if e.deadline is not None]
+        if deadlines:
+            slack = min(deadlines) - now
+            if slack <= self.wait_bound(bucket):
+                return "deadline"
+        # adaptive batching patience: a partial wave older than (roughly)
+        # one wave wall has nothing left to gain from waiting -- and
+        # max_wait stays the absolute starvation-freedom backstop
+        patience = min(self.max_wait,
+                       self.batch_patience * self.estimate(bucket))
+        if now - oldest.arrival >= patience:
+            return "age"
+        return None
+
+    def _cut_ready(self, now: float, *, drain: bool = False
+                   ) -> List[tuple]:
+        """Cut every currently-cuttable wave; returns [(bucket, entries,
+        reason, cut_at)] with queues updated in place."""
+        ready = []
+        for bucket, queue in self._queues.items():
+            while True:
+                reason = "drain" if drain and queue else None
+                reason = self._cut_reason(bucket, queue, now) or reason
+                if reason is None:
+                    break
+                wave, queue = self.engine.cut_wave(
+                    queue, force=reason != "full")
+                if not wave:
+                    break
+                ready.append((bucket, wave, reason, now))
+            self._queues[bucket] = queue
+        return ready
+
+    def _pack_order(self, ready: List[tuple]) -> List[tuple]:
+        """LPT cross-bucket packing: urgent (deadline/age) cuts first, then
+        ``core.scheduler.schedule_lpt`` over the EWMA wall estimates --
+        longest-first, one dispatch lane, deterministic."""
+        if len(ready) <= 1:
+            return ready
+
+        def lpt(group: List[tuple]) -> List[tuple]:
+            if len(group) <= 1:
+                return group
+            costs = [self.estimate(bucket) for bucket, _, _, _ in group]
+            order = core_scheduler.schedule_lpt(costs, 1).assignment[0]
+            return [group[i] for i in order]
+
+        urgent = [r for r in ready if r[2] in ("deadline", "age")]
+        rest = [r for r in ready if r[2] not in ("deadline", "age")]
+        return lpt(urgent) + lpt(rest)
+
+    # -- scheduler tick -----------------------------------------------------
+    def poll(self) -> List[GraphResult]:
+        """One scheduler tick: cut, pack, dispatch, stream.
+
+        Cuts every wave that is ready at the current clock (full waves,
+        deadline-pressured partials, over-age partials), dispatches them in
+        packed order through ``engine.dispatch_wave``, and returns the
+        newly completed results -- each stamped with its ``deadline`` and
+        wave-completion ``completed_at``.  Returns ``[]`` when nothing was
+        ready; callers loop ``poll`` between arrivals.
+        """
+        return self._dispatch(self._cut_ready(self.clock()))
+
+    def drain(self) -> List[GraphResult]:
+        """Force-flush: cut everything still queued (partial waves allowed,
+        reason ``"drain"``), dispatch in packed order, return the results.
+        The queue is empty afterwards."""
+        return self._dispatch(self._cut_ready(self.clock(), drain=True))
+
+    def _dispatch(self, ready: List[tuple]) -> List[GraphResult]:
+        results: List[GraphResult] = []
+        for bucket, wave, reason, cut_at in self._pack_order(ready):
+            wave_results = self.engine.dispatch_wave(
+                bucket, [e.request for e in wave])
+            done_at = self.clock()
+            wall = self.engine.bucket_walls[bucket][-1]
+            self._ewma_for(bucket).observe(wall)
+            self.dispatch_log.append(WaveLog(
+                bucket, len(wave), reason, cut_at, wall))
+            self.dispatched += len(wave)
+            for entry, res in zip(wave, wave_results):
+                res.deadline = entry.deadline
+                res.completed_at = done_at
+                results.append(res)
+        return results
+
+    # -- warmup -------------------------------------------------------------
+    def warmup(self, sizes: Sequence[int]) -> None:
+        """Pre-compile + pre-trace the buckets for ``sizes`` vertex counts
+        by dispatching one dummy single-request wave per NEW bucket, so the
+        first real request doesn't eat compile/trace time -- and so the
+        EWMA seeds from a measured steady-state wall (the second dispatch;
+        ``_ewma_for``'s min-seed ignores the first wave's trace outlier).
+        """
+        for n in sorted({self.engine.bucket_for(int(n)) for n in sizes}):
+            if n in self.engine.bucket_walls:
+                continue
+            req = GraphRequest(np.eye(2, dtype=np.float32),
+                               np.zeros((2, self.engine.f_in), np.float32),
+                               request_id=-1)
+            self.engine.dispatch_wave(n, [req])
+            # a second dispatch records the steady-state (traced) wall
+            self.engine.dispatch_wave(n, [req])

@@ -1,0 +1,305 @@
+"""Continuous deadline-aware serving: deterministic policy + parity fuzz.
+
+Two halves (DESIGN.md §11):
+
+* deterministic scheduler tests -- a fake monotonic clock drives
+  ``ContinuousGraphServer`` through pinned scenarios: full-wave cuts,
+  deadline-triggered partial cuts, age-based starvation-freedom, LPT
+  cross-bucket dispatch ordering, slot-level streaming, drain;
+* bitwise-parity fuzz -- random arrival orders, random deadlines, and
+  injected clock jitter: continuous results must be bitwise-identical to
+  ``GraphServeEngine.run_naive`` on the same requests, with still at most
+  one jit trace per shape bucket.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.graph_engine import (GraphRequest, GraphServeEngine,
+                                        random_requests)
+from repro.serving.scheduler import ContinuousGraphServer
+
+F_IN, HIDDEN, CLASSES = 32, 8, 6
+
+
+class FakeClock:
+    """Deterministic monotonic clock; tests advance it explicitly."""
+
+    def __init__(self, t: float = 0.0, jitter_rng=None,
+                 jitter: float = 0.0):
+        self.t = t
+        self.jitter_rng = jitter_rng
+        self.jitter = jitter
+
+    def __call__(self) -> float:
+        if self.jitter_rng is not None and self.jitter > 0.0:
+            # monotonic jitter: every read advances by a random hair
+            self.t += float(self.jitter_rng.random()) * self.jitter
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("min_bucket", 32)
+    return GraphServeEngine("gcn", f_in=F_IN, hidden=HIDDEN,
+                            n_classes=CLASSES, **kw)
+
+
+def _reqs(n=5, seed=1, sizes=(24, 60)):
+    return random_requests(n, f_in=F_IN, sizes=sizes, seed=seed)
+
+
+def _server(eng, clk, **kw):
+    kw.setdefault("cold_start_wall", 0.01)
+    kw.setdefault("max_wait", 100.0)       # age cut off unless a test asks
+    kw.setdefault("batch_patience", float("inf"))   # ditto (pinned below)
+    return ContinuousGraphServer(eng, clock=clk, **kw)
+
+
+# -- deterministic policy ---------------------------------------------------
+
+def test_full_wave_dispatches_immediately():
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk)
+    reqs = _reqs(2, sizes=(24,))
+    tickets = [srv.submit(r, deadline=clk.t + 1e9) for r in reqs]
+    assert tickets == [0, 1] and srv.pending == 2
+    out = srv.poll()
+    assert sorted(r.request_id for r in out) == [r.request_id for r in reqs]
+    assert srv.pending == 0
+    assert [w.reason for w in srv.dispatch_log] == ["full"]
+    assert srv.dispatch_log[0].n_real == 2
+
+
+def test_short_wave_waits_until_deadline_pressure():
+    clk = FakeClock()
+    eng = _engine(slots=3)
+    srv = _server(eng, clk)
+    for r in _reqs(2, sizes=(24,)):
+        srv.submit(r, deadline=clk.t + 50.0)
+    assert srv.poll() == []                    # slack huge: keep waiting
+    assert srv.pending == 2
+    # advance until slack < EWMA estimate -> partial wave cut
+    est = srv.estimate(32)
+    clk.advance(50.0 - est / 2)
+    out = srv.poll()
+    assert len(out) == 2 and srv.pending == 0
+    assert [w.reason for w in srv.dispatch_log] == ["deadline"]
+    assert srv.dispatch_log[0].n_real == 2     # partial: 2 of 3 slots
+    assert all(r.deadline_met for r in out)
+
+
+def test_tight_deadline_behind_loose_one_still_cuts():
+    """Deadline pressure comes from the TIGHTEST queued deadline, not the
+    queue head: a tight request FIFO'd behind a loose one must not wait
+    out the loose one's slack."""
+    clk = FakeClock()
+    srv = _server(_engine(slots=3), clk)
+    loose, tight = _reqs(2, sizes=(24,))
+    srv.submit(loose, deadline=clk.t + 1e9)
+    srv.submit(tight, deadline=clk.t + 1.0)
+    assert srv.poll() == []
+    clk.advance(1.0 - srv.estimate(32) / 2)    # tight's slack < wait bound
+    out = srv.poll()
+    assert len(out) == 2 and srv.pending == 0
+    assert [w.reason for w in srv.dispatch_log] == ["deadline"]
+    by_id = {r.request_id: r for r in out}
+    assert by_id[tight.request_id].deadline_met
+
+
+def test_deadlineless_requests_age_out():
+    """Starvation-freedom backstop: no deadline, below-slots queue -- the
+    request still dispatches once it has waited max_wait."""
+    clk = FakeClock()
+    srv = _server(_engine(slots=3), clk, max_wait=5.0)
+    srv.submit(_reqs(1, sizes=(24,))[0])       # deadline=None
+    assert srv.poll() == []
+    clk.advance(4.9)
+    assert srv.poll() == []
+    clk.advance(0.2)
+    out = srv.poll()
+    assert len(out) == 1 and srv.pending == 0
+    assert [w.reason for w in srv.dispatch_log] == ["age"]
+
+
+def test_batch_patience_cuts_idle_partial_waves():
+    """Adaptive batching timeout: a partial wave older than
+    batch_patience x the bucket's estimated wall is cut without deadline
+    pressure -- waiting longer than a wave costs cannot pay off."""
+    clk = FakeClock()
+    srv = _server(_engine(slots=3), clk, batch_patience=2.0,
+                  cold_start_wall=0.01)
+    srv.submit(_reqs(1, sizes=(24,))[0], deadline=clk.t + 1e9)
+    assert srv.poll() == []
+    clk.advance(0.019)                     # < 2.0 * 0.01: keep batching
+    assert srv.poll() == []
+    clk.advance(0.002)                     # past patience -> cut
+    out = srv.poll()
+    assert len(out) == 1
+    assert [w.reason for w in srv.dispatch_log] == ["age"]
+
+
+def test_every_submission_eventually_dispatched():
+    """Starvation-freedom across a mixed stream: any poll-only schedule
+    (no drain) dispatches everything once the clock moves far enough."""
+    clk = FakeClock()
+    srv = _server(_engine(slots=3), clk, max_wait=1.0)
+    reqs = _reqs(8, seed=5)                    # two buckets, odd remainders
+    for i, r in enumerate(reqs):
+        srv.submit(r, deadline=clk.t + 1e6 if i % 2 else None)
+        srv.poll()
+    done = []
+    for _ in range(10):
+        clk.advance(0.6)
+        done += srv.poll()
+        if srv.pending == 0:
+            break
+    assert srv.pending == 0
+    assert srv.dispatched == len(reqs)
+
+
+def test_lpt_cross_bucket_ordering():
+    """Waves cut in the same tick dispatch longest-estimate-first
+    (schedule_lpt over per-bucket EWMA walls), urgent cuts ahead."""
+    clk = FakeClock()
+    eng = _engine(slots=2)
+    srv = _server(eng, clk)
+    # prime the EWMA estimates: small bucket cheap, big bucket expensive
+    srv._ewma_for(32).value = 0.010
+    srv._ewma_for(64).value = 0.030
+    small = random_requests(2, f_in=F_IN, sizes=(24,), seed=2)
+    big = random_requests(2, f_in=F_IN, sizes=(60,), seed=3)
+    for r in small + big:                      # small submitted FIRST
+        srv.submit(r, deadline=clk.t + 1e9)
+    srv.poll()
+    assert [w.bucket for w in srv.dispatch_log] == [64, 32]   # LPT order
+    assert [w.reason for w in srv.dispatch_log] == ["full", "full"]
+    # urgent partial beats a longer full wave in the same tick
+    srv2 = _server(_engine(slots=2), clk)
+    srv2._ewma_for(32).value = 0.010
+    srv2._ewma_for(64).value = 0.030
+    srv2.submit(random_requests(1, f_in=F_IN, sizes=(24,), seed=4)[0],
+                deadline=clk.t + 0.001)        # already inside slack
+    for r in random_requests(2, f_in=F_IN, sizes=(60,), seed=5):
+        srv2.submit(r, deadline=clk.t + 1e9)
+    srv2.poll()
+    assert [(w.bucket, w.reason) for w in srv2.dispatch_log] == [
+        (32, "deadline"), (64, "full")]
+
+
+def test_slot_level_streaming():
+    """Results surface per wave as it completes, not at batch end: a full
+    wave's results return from THIS poll while a short other-bucket queue
+    stays pending."""
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk)
+    full = random_requests(2, f_in=F_IN, sizes=(24,), seed=6)
+    short = random_requests(1, f_in=F_IN, sizes=(60,), seed=7)
+    ids = [srv.submit(r, deadline=clk.t + 1e9) for r in full + short]
+    out = srv.poll()
+    assert sorted(r.request_id for r in out) == sorted(
+        r.request_id for r in full)
+    assert srv.pending == 1                    # the short wave still queued
+    assert all(r.completed_at is not None for r in out)
+    tail = srv.drain()
+    assert [r.request_id for r in tail] == [short[0].request_id]
+    assert srv.dispatch_log[-1].reason == "drain"
+    assert len(ids) == len(out) + len(tail)
+
+
+def test_drain_flushes_everything():
+    clk = FakeClock()
+    srv = _server(_engine(slots=3), clk)
+    reqs = _reqs(7, seed=8)                    # partial waves in 2 buckets
+    for r in reqs:
+        srv.submit(r)
+    out = srv.drain()
+    assert sorted(r.request_id for r in out) == sorted(
+        r.request_id for r in reqs)
+    assert srv.pending == 0 and srv.drain() == []
+    for log in srv.dispatch_log:
+        assert log.reason in ("full", "drain")
+
+
+def test_ewma_estimator_cold_start_and_update():
+    clk = FakeClock()
+    eng = _engine()
+    srv = _server(eng, clk, cold_start_wall=0.123, ewma_alpha=0.5)
+    # bucket never ran anywhere: cold start value
+    assert srv.estimate(32) == pytest.approx(0.123)
+    # engine walls seed a FRESH server's estimate (min, per bucket --
+    # walls only have upward outliers, e.g. the first wave's trace time)
+    eng.bucket_walls[64] = [0.4, 0.01, 0.02]
+    srv2 = _server(eng, clk, cold_start_wall=0.123)
+    assert srv2.estimate(64) == pytest.approx(0.01)   # min shrugs trace
+    # a NEVER-run bucket must not inherit a smaller bucket's wall: the
+    # cross-bucket fallback clamps to at least cold_start_wall
+    eng.wave_walls = [0.001]
+    srv3 = _server(eng, clk, cold_start_wall=0.123)
+    assert srv3.estimate(128) == pytest.approx(0.123)
+    # observations fold in with weight alpha
+    srv._ewma_for(32).observe(0.2)
+    assert srv.estimate(32) == pytest.approx(0.5 * 0.123 + 0.5 * 0.2)
+
+
+def test_warmup_traces_buckets_before_traffic():
+    clk = FakeClock()
+    eng = _engine(slots=2)
+    srv = _server(eng, clk)
+    srv.warmup((24, 60))
+    assert eng.buckets == [32, 64]
+    traces0 = eng.executor.trace_count
+    assert traces0 == 2
+    for r in _reqs(4, seed=9):
+        srv.submit(r, deadline=clk.t + 1e9)
+    srv.poll()
+    srv.drain()
+    assert eng.executor.trace_count == traces0     # no new traces
+
+
+def test_submit_validates_at_the_edge():
+    srv = _server(_engine(), FakeClock())
+    bad = GraphRequest(np.full((4, 4), np.nan, np.float32),
+                       np.ones((4, F_IN), np.float32))
+    with pytest.raises(ValueError, match="non-finite"):
+        srv.submit(bad)
+    assert srv.pending == 0
+
+
+# -- bitwise-parity fuzz ----------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_continuous_parity_fuzz(seed):
+    """Random arrival order, random deadlines (some None), random clock
+    jitter, interleaved submit/poll: the streamed results are bitwise equal
+    to run_naive on the same requests, and traces stay <= one per bucket."""
+    rng = np.random.default_rng(200 + seed)
+    clk = FakeClock(jitter_rng=rng, jitter=0.005)
+    eng = _engine(slots=int(rng.integers(2, 5)))
+    srv = ContinuousGraphServer(eng, clock=clk, cold_start_wall=0.01,
+                                max_wait=float(rng.uniform(0.01, 0.5)))
+    reqs = _reqs(int(rng.integers(5, 10)), seed=300 + seed, sizes=(20, 40, 60))
+    order = rng.permutation(len(reqs))
+    done = []
+    for i in order:
+        deadline = (None if rng.random() < 0.3
+                    else clk.t + float(rng.uniform(0.0, 2.0)))
+        srv.submit(reqs[i], deadline=deadline)
+        if rng.random() < 0.5:
+            clk.advance(float(rng.uniform(0.0, 0.3)))
+            done += srv.poll()
+    done += srv.drain()
+    assert srv.pending == 0
+    assert sorted(r.request_id for r in done) == sorted(
+        r.request_id for r in reqs)
+    naive = eng.run_naive(reqs)
+    by_id = {r.request_id: r for r in done}
+    for n, req in zip(naive, reqs):
+        got = by_id[n.request_id]
+        assert got.logits.shape == (req.n_vertices, CLASSES)
+        np.testing.assert_array_equal(
+            got.logits, n.logits,
+            err_msg=f"request {n.request_id} differs from run_naive")
+    assert eng.executor.trace_count <= len(eng.buckets)

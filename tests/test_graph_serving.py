@@ -130,6 +130,85 @@ def test_malformed_requests_rejected():
         eng.run_naive([bad_adj])
 
 
+def _ok_request(n=8):
+    return np.eye(n, dtype=np.float32), np.ones((n, F_IN), np.float32)
+
+
+def test_nan_adjacency_rejected():
+    """NaN adjacency must fail at admission -- it would otherwise flow
+    through normalize_adjacency's degree sums and poison the whole wave."""
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    adj[2, 3] = np.nan
+    with pytest.raises(ValueError, match="adjacency.*non-finite"):
+        eng.serve([GraphRequest(adj, feats)])
+
+
+def test_inf_adjacency_rejected():
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    adj[0, 1] = np.inf
+    with pytest.raises(ValueError, match="adjacency.*non-finite"):
+        eng.serve([GraphRequest(adj, feats)])
+
+
+def test_nan_features_rejected():
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    feats[1, 1] = np.nan
+    with pytest.raises(ValueError, match="features.*non-finite"):
+        eng.serve([GraphRequest(adj, feats)])
+
+
+def test_inf_features_rejected():
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    feats[0, 0] = -np.inf
+    with pytest.raises(ValueError, match="features.*non-finite"):
+        eng.run_naive([GraphRequest(adj, feats)])
+
+
+def test_complex_dtype_rejected():
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    with pytest.raises(ValueError, match="features dtype"):
+        eng.serve([GraphRequest(adj, feats.astype(np.complex64))])
+
+
+def test_object_dtype_rejected():
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    with pytest.raises(ValueError, match="adjacency dtype"):
+        eng.serve([GraphRequest(adj.astype(object), feats)])
+
+
+def test_integer_and_bool_inputs_admitted():
+    """int/bool graphs are legitimate adjacency encodings: they cast to
+    float32 at padding and must NOT be rejected by the dtype gate."""
+    eng = _engine("gcn")
+    adj, feats = _ok_request()
+    res = eng.serve([GraphRequest(adj.astype(bool), feats),
+                     GraphRequest(adj.astype(np.int32), feats)])
+    assert len(res) == 2 and res[0].logits.shape == (8, CLASSES)
+
+
+def test_wave_report_plumbing():
+    """dispatch_wave stamps the wave's width and real-slot count into the
+    report (the continuous scheduler's EWMA reads the walls this plumbs)."""
+    eng = _engine("gcn", slots=3)
+    reqs = _reqs(2, sizes=(24,))
+    out = eng.dispatch_wave(32, reqs)
+    assert [r.request_id for r in out] == [r.request_id for r in reqs]
+    rep = eng.last_wave_report
+    assert rep is not None
+    assert rep.wave_slots == 3 and rep.wave_real == 2
+    assert eng.bucket_walls[32] == [rep.fused_wall_seconds]
+    with pytest.raises(ValueError, match="wave of"):
+        eng.dispatch_wave(32, [])
+    with pytest.raises(ValueError, match="wave of"):
+        eng.dispatch_wave(32, _reqs(4, sizes=(24,)))
+
+
 def test_run_batch_report_modes():
     """The wave-level report: lean by default (no kernel bookkeeping, one
     wall clock), per-request per-kernel entries with collect_report=True,

@@ -1,0 +1,172 @@
+"""Property tests for the serving admission contract (DESIGN.md §10/§11).
+
+The admission surface (``bucket_for`` / ``cut_wave`` / ``_admit`` /
+``_padded``) now backs BOTH the synchronous ``serve`` and the continuous
+scheduler, so its invariants are pinned property-style, not just by
+examples:
+
+* every request lands in exactly one wave, and no wave exceeds ``slots``;
+* ``bucket_for(n)`` is the MINIMAL power of two >= max(n, ``min_bucket``);
+* ``_padded``'s padding rows/cols are exactly zero and the real region is
+  exactly the normalized input (bit for bit).
+
+Each property is a plain checker function; hypothesis drives them with
+arbitrary draws when it is installed (CI), and a seeded random sweep
+drives the same checkers otherwise (this container), so the properties
+are exercised everywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.data import graphs as graph_data
+from repro.serving.graph_engine import GraphRequest, GraphServeEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+F_IN = 16
+
+
+def _engine(slots: int, min_bucket: int) -> GraphServeEngine:
+    return GraphServeEngine("gcn", f_in=F_IN, hidden=4, n_classes=3,
+                            slots=slots, min_bucket=min_bucket)
+
+
+def _request(n: int, rid: int, rng) -> GraphRequest:
+    a = (rng.random((n, n)) < 0.3).astype(np.float32)
+    h = (rng.random((n, F_IN)) < 0.5).astype(np.float32)
+    return GraphRequest(a, h, request_id=rid)
+
+
+# -- checkers (shared by hypothesis and the seeded fallback) ----------------
+
+def check_admission_partition(sizes, slots, min_bucket, rng):
+    """Each request appears in exactly one wave; wave size <= slots; every
+    request's wave lives under its own bucket."""
+    eng = _engine(slots, min_bucket)
+    reqs = [_request(n, i, rng) for i, n in enumerate(sizes)]
+    admitted = eng._admit(reqs)
+    seen = []
+    for bucket, waves in admitted.items():
+        for wave in waves:
+            assert 0 < len(wave) <= eng.slots
+            for idx, req in wave:
+                assert eng.bucket_for(req.n_vertices) == bucket
+                seen.append(idx)
+    assert sorted(seen) == list(range(len(reqs)))
+
+
+def check_cut_wave(n_entries, slots, min_bucket):
+    """cut_wave pops exactly min(slots, n) under force, exactly slots when
+    full, nothing otherwise -- and never reorders."""
+    eng = _engine(slots, min_bucket)
+    entries = list(range(n_entries))
+    wave, rest = eng.cut_wave(entries)
+    if n_entries >= eng.slots:
+        assert wave == entries[: eng.slots] and rest == entries[eng.slots:]
+    else:
+        assert wave == [] and rest == entries
+    forced, frest = eng.cut_wave(entries, force=True)
+    assert forced == entries[: min(eng.slots, n_entries)]
+    assert forced + frest == entries
+
+
+def check_bucket_minimal(n, min_bucket):
+    eng = _engine(2, min_bucket)
+    b = eng.bucket_for(n)
+    floor = max(n, eng.min_bucket)
+    assert b & (b - 1) == 0, f"bucket {b} not a power of two"
+    assert b >= floor
+    assert b == eng.min_bucket or b // 2 < floor, (
+        f"bucket {b} not minimal for n={n}, min_bucket={eng.min_bucket}")
+
+
+def check_padding_zero(eng, n, rng):
+    """Padding region of every admitted tensor is exactly zero; the real
+    region is exactly the normalized/cast input."""
+    req = _request(n, 0, rng)
+    bucket = eng.bucket_for(n)
+    padded = eng._padded(req, bucket)
+    adj = graph_data.normalize_adjacency(req.adjacency)
+    for name, arr in padded.items():
+        assert arr.shape[0] == bucket
+        if name == "H0":
+            np.testing.assert_array_equal(
+                arr[:n], req.features.astype(np.float32))
+        else:
+            ref = adj[0] if name == "A" else adj[1]
+            np.testing.assert_array_equal(arr[:n, :n], ref)
+            assert not arr[:, n:].any(), f"{name}: nonzero padding cols"
+        assert not arr[n:].any(), f"{name}: nonzero padding rows"
+
+
+# -- hypothesis drivers (CI; skipped where hypothesis is absent) ------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(sizes=st.lists(st.integers(1, 90), min_size=1, max_size=12),
+           slots=st.integers(1, 6),
+           min_bucket=st.integers(2, 64),
+           seed=st.integers(0, 2**16))
+    def test_admission_partition_property(sizes, slots, min_bucket, seed):
+        check_admission_partition(sizes, slots, min_bucket,
+                                  np.random.default_rng(seed))
+
+    @settings(max_examples=40, deadline=None)
+    @given(n_entries=st.integers(0, 20), slots=st.integers(1, 6),
+           min_bucket=st.integers(2, 64))
+    def test_cut_wave_property(n_entries, slots, min_bucket):
+        check_cut_wave(n_entries, slots, min_bucket)
+
+    @settings(max_examples=60, deadline=None)
+    @given(n=st.integers(1, 5000), min_bucket=st.integers(2, 512))
+    def test_bucket_minimal_property(n, min_bucket):
+        check_bucket_minimal(n, min_bucket)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 60), seed=st.integers(0, 2**16))
+    def test_padding_zero_property(n, seed):
+        # one shared engine keeps this to two compiled buckets (32/64)
+        check_padding_zero(_PAD_ENGINE, n, np.random.default_rng(seed))
+
+    _PAD_ENGINE = _engine(2, 32)
+
+
+# -- seeded fallback sweep (always runs; same checkers) ---------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_admission_partition_sweep(seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 90, size=rng.integers(1, 12)).tolist()
+    check_admission_partition(sizes, int(rng.integers(1, 6)),
+                              int(rng.integers(2, 64)), rng)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cut_wave_sweep(seed):
+    rng = np.random.default_rng(100 + seed)
+    check_cut_wave(int(rng.integers(0, 20)), int(rng.integers(1, 6)),
+                   int(rng.integers(2, 64)))
+
+
+def test_bucket_minimal_sweep():
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        check_bucket_minimal(int(rng.integers(1, 5000)),
+                             int(rng.integers(2, 512)))
+    # the documented edges
+    eng = _engine(2, 64)
+    assert eng.bucket_for(1) == 64
+    assert eng.bucket_for(64) == 64
+    assert eng.bucket_for(65) == 128
+
+
+def test_padding_zero_sweep():
+    eng = _engine(2, 32)                     # buckets 32/64 only
+    rng = np.random.default_rng(3)
+    for n in (1, 7, 31, 32, 33, 60, 64):
+        check_padding_zero(eng, n, rng)

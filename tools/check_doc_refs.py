@@ -46,6 +46,10 @@ PUBLIC = [
     # lean on; run_batch is the executor's multi-tenant entry point
     ("repro.serving.graph_engine", ["GraphServeEngine", "GraphRequest",
                                     "GraphResult", "random_requests"]),
+    # the continuous-serving surface (DESIGN 11 / README "Continuous
+    # serving")
+    ("repro.serving.scheduler", ["ContinuousGraphServer", "QueuedRequest",
+                                 "WaveLog"]),
     ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS",
                           "init_spec_weights"]),
     ("repro.data.graphs", ["normalize_adjacency", "materialize"]),
@@ -56,7 +60,9 @@ PUBLIC = [
 PUBLIC_ATTRS = [
     ("repro.core.runtime", "FusedModelExecutor", ["run", "run_batch"]),
     ("repro.serving.graph_engine", "GraphServeEngine",
-     ["serve", "run_naive", "bucket_for"]),
+     ["serve", "run_naive", "bucket_for", "cut_wave", "dispatch_wave"]),
+    ("repro.serving.scheduler", "ContinuousGraphServer",
+     ["submit", "poll", "drain", "warmup", "wait_bound"]),
 ]
 
 
