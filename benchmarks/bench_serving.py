@@ -19,9 +19,11 @@ hence its own density profile):
   request set (DESIGN.md section 11).
 
 Per engine: p50/p99 per-request latency (a served request's latency is its
-wave's wall clock -- requests share the dispatch) and aggregate throughput
-(requests/s).  Timing is best-of-N with the two engines interleaved per
-round, same rationale as ``bench_engine``.  ``BENCH_serving.json`` carries
+wave's wall clock -- requests share the dispatch), aggregate throughput
+(requests/s), and per-wave padding efficiency (real/slots occupancy from
+``InferenceReport.wave_real``/``wave_slots``).  Timing is best-of-N with
+the two engines interleaved per round, same rationale as ``bench_engine``.
+``BENCH_serving.json`` carries
 the serving perf trajectory (sync rows + a continuous row per model);
 ``--smoke`` is the CI gate (bitwise served-vs-naive parity + a loose
 throughput floor) and writes ``BENCH_serving.smoke.json`` for the workflow
@@ -29,9 +31,19 @@ artifact; ``--smoke --continuous`` additionally gates continuous-vs-naive
 parity, the deadline hit-rate floor, and continuous throughput vs sync,
 writing ``BENCH_serving.continuous.smoke.json`` alongside.
 
+``--mesh`` is the multidevice ladder (DESIGN.md section 12): waves
+device-sharded over a ``cores`` mesh of every visible device, single-lane
+vs one-lane-per-device continuous dispatch on the same Poisson stream,
+gating sharded-vs-naive parity, the per-(bucket, lane-count) trace bound,
+and multi-lane >= ``--lane-tol`` x single-lane throughput.  CI's
+multidevice job runs it on 8 emulated host devices and uploads
+``BENCH_serving.multidevice.smoke.json``.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke              # CI gate
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke --continuous # + online gate
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_serving --mesh --smoke   # + mesh gate
 """
 from __future__ import annotations
 
@@ -51,6 +63,7 @@ from repro.serving.scheduler import ContinuousGraphServer
 _OUT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
 _SMOKE_OUT = _OUT.with_name("BENCH_serving.smoke.json")
 _CONT_SMOKE_OUT = _OUT.with_name("BENCH_serving.continuous.smoke.json")
+_MESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.multidevice.smoke.json")
 
 F_IN = 64
 SIZES = (56, 100, 150)            # -> buckets 64, 128, 256
@@ -71,7 +84,8 @@ def _measure_naive(eng: GraphServeEngine, reqs, rounds: int):
 
 
 def _measure_served(eng: GraphServeEngine, reqs, rounds: int):
-    """Best round's per-request latencies, total, and wave count.
+    """Best round's per-request latencies, total, wave count, and per-wave
+    (real, slots) occupancy.
 
     A request's latency is its admission wave's dispatch wall clock (all
     requests of a wave share it) scaled by the round's host-prep overhead
@@ -79,21 +93,29 @@ def _measure_served(eng: GraphServeEngine, reqs, rounds: int):
     so both the latency columns and the throughput comparison against the
     naive loop (whose per-request timing also includes ITS host prep:
     normalization, padding, tensor construction) are apples to apples."""
-    best = (float("inf"), None, 0)
+    best = (float("inf"), None, 0, [])
     for _ in range(rounds):
         w0 = len(eng.wave_walls)
+        l0 = len(eng.wave_loads)
         t0 = time.perf_counter()
         res = eng.serve(reqs)
         total = time.perf_counter() - t0
         walls = eng.wave_walls[w0:]
+        loads = eng.wave_loads[l0:]
         prep_scale = total / sum(walls)
         wave_of = {r.request_id: r.wave for r in res}
         first_wave = min(wave_of.values())
         lat = [walls[wave_of[r.request_id] - first_wave] * prep_scale
                for r in reqs]
         if total < best[0]:
-            best = (total, lat, len(walls))
-    return best[1], best[0], best[2]
+            best = (total, lat, len(walls), loads)
+    return best[1], best[0], best[2], best[3]
+
+
+def _padding_efficiency(loads) -> float:
+    """Aggregate real/slots over a wave-load series (1.0 = no padding)."""
+    slots = sum(s for _, s in loads)
+    return (sum(r for r, _ in loads) / slots) if slots else 1.0
 
 
 def _bench_model(model: str, n_requests: int, slots: int, rounds: int
@@ -106,17 +128,22 @@ def _bench_model(model: str, n_requests: int, slots: int, rounds: int
     eng.run_naive(reqs)
     naive_lat, served_lat = [None], [None]
     naive_total, served_total = [float("inf")], [float("inf")]
-    waves_per_round = 0
+    waves_per_round, wave_loads = 0, []
     for _ in range(rounds):                      # interleave per round
-        lat, tot, waves_per_round = _measure_served(eng, reqs, 1)
+        lat, tot, waves_per_round, loads = _measure_served(eng, reqs, 1)
         if tot < served_total[0]:
-            served_total[0], served_lat[0] = tot, lat
+            served_total[0], served_lat[0], wave_loads = tot, lat, loads
         lat, tot = _measure_naive(eng, reqs, 1)
         if tot < naive_total[0]:
             naive_total[0], naive_lat[0] = tot, lat
     row = {
         "model": model, "n_requests": n_requests, "slots": slots,
         "buckets": eng.buckets, "waves_per_round": waves_per_round,
+        # per-wave (real, slots) occupancy + aggregate real/slots: how much
+        # of every dispatched wave carried real requests (InferenceReport
+        # wave_real/wave_slots, recorded by the engine per dispatch)
+        "wave_loads": [[r, s] for r, s in wave_loads],
+        "padding_efficiency": _padding_efficiency(wave_loads),
         "naive_p50_ms": float(np.percentile(naive_lat[0], 50) * 1e3),
         "naive_p99_ms": float(np.percentile(naive_lat[0], 99) * 1e3),
         "naive_throughput_rps": n_requests / naive_total[0],
@@ -130,17 +157,21 @@ def _bench_model(model: str, n_requests: int, slots: int, rounds: int
          f"naive_p50={row['naive_p50_ms']:.2f}ms "
          f"served_p50={row['served_p50_ms']:.2f}ms "
          f"throughput={row['served_throughput_rps']:.1f}rps "
-         f"({row['throughput_speedup']:.2f}x naive)")
+         f"({row['throughput_speedup']:.2f}x naive) "
+         f"pad_eff={row['padding_efficiency']:.2f}")
     return row
 
 
-def _replay_continuous(eng: GraphServeEngine, reqs, arrivals, budget: float):
+def _replay_continuous(eng: GraphServeEngine, reqs, arrivals, budget: float,
+                       n_lanes=None):
     """Open-loop arrival replay: submit each request when the wall clock
     passes its Poisson arrival time (deadline = arrival + ``budget``),
     polling the scheduler in between; drain flushes the tail once the
     stream ends.  Returns (results, per-request sojourn latencies,
-    hit-rate, busy-span seconds)."""
-    srv = ContinuousGraphServer(eng)
+    hit-rate, busy-span seconds, per-wave loads).  ``n_lanes`` overrides
+    the scheduler's lane count (None = one per engine mesh device)."""
+    srv = ContinuousGraphServer(eng, n_lanes=n_lanes)
+    w0 = len(eng.wave_loads)
     t0 = time.monotonic()
     abs_arrival = t0 + np.asarray(arrivals)
     n, i, done = len(reqs), 0, []
@@ -161,7 +192,27 @@ def _replay_continuous(eng: GraphServeEngine, reqs, arrivals, budget: float):
     lat = [r.completed_at - by_arrival[r.request_id] for r in done]
     hits = [bool(r.deadline_met) for r in done]
     span = max(r.completed_at for r in done) - t0      # from stream start
-    return done, lat, float(np.mean(hits)), float(span)
+    return done, lat, float(np.mean(hits)), float(span), eng.wave_loads[w0:]
+
+
+def _best_replay(eng: GraphServeEngine, reqs, rate: float, budget: float,
+                 rounds: int, n_lanes=None):
+    """Best-of-rounds Poisson replay, the ONE arrival methodology every
+    continuous ladder shares (sync-vs-continuous AND the mesh lane
+    comparison): per round, seeded inter-arrival draws (seed 100+r),
+    a full `_replay_continuous`, and an all-served assertion; the round
+    with the smallest busy span wins.  Returns (span, hit_rate,
+    latencies, wave_loads, last_arrival)."""
+    best = None
+    for r in range(rounds):
+        rng = np.random.default_rng(100 + r)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, len(reqs)))
+        results, lat, hit_rate, span, loads = _replay_continuous(
+            eng, reqs, arrivals, budget, n_lanes=n_lanes)
+        assert len(results) == len(reqs)
+        if best is None or span < best[0]:
+            best = (span, hit_rate, lat, loads, float(arrivals[-1]))
+    return best
 
 
 def _bench_continuous(model: str, n_requests: int, slots: int, rounds: int,
@@ -192,23 +243,17 @@ def _bench_continuous(model: str, n_requests: int, slots: int, rounds: int,
     capacity = n_requests / serve_wall       # measured, incl. fragmentation
     rate = load * capacity
     budget = budget_factor * serve_wall
-    best = None
-    for r in range(rounds):
-        rng = np.random.default_rng(100 + r)
-        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
-        results, lat, hit_rate, span = _replay_continuous(
-            eng, reqs, arrivals, budget)
-        assert len(results) == n_requests
-        sync_span = float(arrivals[-1]) + serve_wall   # gather, then serve
-        if best is None or span < best[2]:
-            best = (lat, hit_rate, span, sync_span)
-    lat, hit_rate, span, sync_span = best
+    span, hit_rate, lat, loads, last_arrival = _best_replay(
+        eng, reqs, rate, budget, rounds)
+    sync_span = last_arrival + serve_wall              # gather, then serve
     row = {
         "mode": "continuous", "model": model, "n_requests": n_requests,
         "slots": slots, "load": load, "budget_factor": budget_factor,
         "deadline_budget_ms": budget * 1e3,
         "arrival_rate_rps": rate,
         "deadline_hit_rate": hit_rate,
+        "wave_loads": [[r_, s] for r_, s in loads],
+        "padding_efficiency": _padding_efficiency(loads),
         "p50_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
         "throughput_rps": n_requests / span,
@@ -220,7 +265,8 @@ def _bench_continuous(model: str, n_requests: int, slots: int, rounds: int,
     emit(f"serving.continuous.{model}", row["p50_ms"] * 1e3,
          f"hit_rate={hit_rate:.2f} p99={row['p99_ms']:.2f}ms "
          f"throughput={row['throughput_rps']:.1f}rps "
-         f"({row['throughput_vs_sync']:.2f}x sync gather+serve)")
+         f"({row['throughput_vs_sync']:.2f}x sync gather+serve) "
+         f"pad_eff={row['padding_efficiency']:.2f}")
     return row
 
 
@@ -247,6 +293,111 @@ def _continuous_parity(model: str) -> None:
     emit(f"serving.continuous.parity.{model}", 0.0,
          f"{len(reqs)} requests bitwise OK, "
          f"{eng.executor.trace_count} traces / {len(eng.buckets)} buckets")
+
+
+def _bench_multidevice(model: str, n_requests: int, rounds: int,
+                       load: float, budget_factor: float) -> dict:
+    """Single-lane vs multi-lane continuous serving on the cores mesh.
+
+    One device-sharded engine (waves split over every visible device,
+    requests LPT-binned by perf_model cost); the SAME Poisson stream is
+    replayed through a single-lane scheduler and a one-lane-per-device
+    scheduler.  Gates (``--mesh --smoke``): sharded-vs-naive bitwise
+    parity, <= one trace per (bucket, lane count), and multi-lane
+    throughput >= ``--lane-tol`` x single-lane (DESIGN.md section 12).
+    """
+    from repro.distributed import sharding as dist_sharding
+    mesh = dist_sharding.cores_mesh()
+    devices = int(mesh.devices.size)
+    slots = devices * max(1, 4 // devices)     # >= 4, divisible by devices
+    reqs = random_requests(n_requests, f_in=F_IN, sizes=SIZES, seed=7)
+    eng = GraphServeEngine(model, f_in=F_IN, hidden=16, n_classes=7,
+                           slots=slots, weight_seed=0, mesh=mesh)
+    served = eng.serve(reqs)                 # warm: compile + trace + walls
+    naive = {r.request_id: r for r in eng.run_naive(reqs)}
+    for r in served:
+        if not np.array_equal(r.logits, naive[r.request_id].logits):
+            sys.exit(f"sharded parity FAILED: {model} request "
+                     f"{r.request_id} differs from per-request engine "
+                     f"on the {devices}-device mesh")
+    if eng.executor.trace_count > len(eng.buckets):
+        sys.exit(f"sharded trace regression: {eng.executor.trace_count} "
+                 f"traces for {len(eng.buckets)} buckets")
+    serve_wall = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        serve_wall = min(serve_wall, time.perf_counter() - t0)
+    capacity = n_requests / serve_wall
+    rate = load * capacity
+    budget = budget_factor * serve_wall
+    lanes_stats = {}
+    for n_lanes in (1, devices):
+        span, hit_rate, lat, loads, _ = _best_replay(
+            eng, reqs, rate, budget, rounds, n_lanes=n_lanes)
+        lanes_stats[n_lanes] = {
+            "throughput_rps": n_requests / span,
+            "deadline_hit_rate": hit_rate,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "padding_efficiency": _padding_efficiency(loads),
+        }
+        if devices == 1:                     # single device: both identical
+            break
+    multi = lanes_stats[devices]
+    single = lanes_stats[1]
+    row = {
+        "mode": "multidevice", "model": model, "n_requests": n_requests,
+        "devices": devices, "slots": slots, "load": load,
+        "budget_factor": budget_factor,
+        "sync_sharded_throughput_rps": capacity,
+        "single_lane": single, "multi_lane": multi,
+        "lane_speedup": (multi["throughput_rps"]
+                         / single["throughput_rps"]),
+    }
+    emit(f"serving.multidevice.{model}", multi["p99_ms"] * 1e3,
+         f"devices={devices} slots={slots} "
+         f"multi_lane={multi['throughput_rps']:.1f}rps "
+         f"({row['lane_speedup']:.2f}x single-lane) "
+         f"hit_rate={multi['deadline_hit_rate']:.2f} "
+         f"pad_eff={multi['padding_efficiency']:.2f}")
+    return row
+
+
+def run_mesh(*, smoke: bool = False, fast: bool = True, load: float = 2.0,
+             budget_factor: float = 2.0, lane_tol: float = 1.0,
+             write_json: bool = True) -> list:
+    """Multidevice ladder (``--mesh``): parity + trace gates, then the
+    single-lane vs multi-lane continuous comparison per model.  Smoke
+    writes ``BENCH_serving.multidevice.smoke.json`` (the multidevice CI
+    job's artifact); a full run merges ``multidevice_rows`` into
+    ``BENCH_serving.json`` without disturbing the sync/continuous rows."""
+    models, n_requests, rounds = _scale(smoke, fast)
+    # the lane comparison needs enough arrivals to fill waves past the
+    # 8-slot mesh AND a long enough busy span that scheduler-noise doesn't
+    # swamp the single-vs-multi-lane delta: 16 requests keep the CI smoke
+    # job short; full runs stretch to 32
+    n_requests = 16 if smoke else 32
+    rows = [_bench_multidevice(m, n_requests, rounds, load, budget_factor)
+            for m in models]
+    payload = {
+        "bench": "multi-lane device-sharded continuous serving",
+        "device": jax.default_backend(),
+        "devices": jax.device_count(),
+        "rounds": rounds,
+        "rows": rows,
+    }
+    if smoke:
+        _MESH_SMOKE_OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    elif write_json:
+        data = json.loads(_OUT.read_text()) if _OUT.exists() else {}
+        data["multidevice_rows"] = rows
+        data["multidevice_devices"] = payload["devices"]
+        _OUT.write_text(json.dumps(data, indent=2) + "\n")
+    lagging = [r for r in rows if r["lane_speedup"] < lane_tol]
+    if lagging:
+        sys.exit(f"multi-lane throughput below {lane_tol}x single-lane: "
+                 f"{[(r['model'], round(r['lane_speedup'], 2)) for r in lagging]}")
+    return rows
 
 
 def _scale(smoke: bool, fast: bool) -> tuple:
@@ -335,6 +486,20 @@ if __name__ == "__main__":
                          "(bitwise continuous-vs-naive parity, deadline "
                          "hit-rate floor, throughput vs sync serve) and "
                          "write BENCH_serving.continuous.smoke.json")
+    ap.add_argument("--mesh", action="store_true",
+                    help="multidevice mode: device-sharded waves over a "
+                         "cores mesh of every visible device (run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=8 to emulate), gating sharded parity, trace "
+                         "count, and multi-lane vs single-lane continuous "
+                         "throughput; with --smoke writes "
+                         "BENCH_serving.multidevice.smoke.json, otherwise "
+                         "merges multidevice_rows into BENCH_serving.json")
+    ap.add_argument("--lane-tol", type=float, default=1.0,
+                    help="mesh gate: fail if multi-lane continuous "
+                         "throughput < tol x single-lane on the same "
+                         "sharded engine.  CI passes a looser value "
+                         "(shared-runner timing noise)")
     ap.add_argument("--tol", type=float, default=1.5,
                     help="throughput gate: fail if served throughput < tol "
                          "x naive.  Default asserts the headline batching "
@@ -357,6 +522,15 @@ if __name__ == "__main__":
                     help="deadline budget as a multiple of the expected "
                          "full-service span")
     args = ap.parse_args()
+    if args.mesh:
+        # --mesh is its own ladder with its own gates (--lane-tol); the
+        # sync/continuous gate flags do not apply to it
+        if args.continuous:
+            ap.error("--mesh runs its own ladder; the continuous gates "
+                     "run in the (non-mesh) --smoke --continuous job")
+        run_mesh(smoke=args.smoke, fast=not args.full, load=args.load,
+                 budget_factor=args.budget_factor, lane_tol=args.lane_tol)
+        sys.exit(0)
     if args.smoke:
         _parity("gcn")
         if args.continuous:

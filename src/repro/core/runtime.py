@@ -38,8 +38,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import analyzer, profiler, scheduler
+from repro.distributed import sharding as dist_sharding
 from repro.core.compiler import CompiledModel
 from repro.core.dynasparse import DynasparseResult, dynasparse_matmul
 from repro.core.ir import Activation, AggOp, KernelIR, KernelType
@@ -83,6 +86,9 @@ class InferenceReport:
     # estimator and the serving benchmarks read these.
     wave_slots: Optional[int] = None
     wave_real: Optional[int] = None
+    # lane count the wave was dispatched over (1 when unsharded): the size
+    # of the ``cores`` mesh axis run_batch sharded the request scan across.
+    wave_lanes: int = 1
 
     @property
     def total_cycles(self) -> float:
@@ -128,6 +134,25 @@ class InferenceReport:
     @property
     def histogram(self) -> np.ndarray:
         return np.sum([k.histogram for k in self.kernels], axis=0)
+
+
+@dataclasses.dataclass
+class PendingWave:
+    """An in-flight ``run_batch`` dispatch (``launch_batch``'s handle).
+
+    ``outs``/``sides`` are unmaterialized jax arrays until
+    ``finish_batch`` blocks on them; ``launched_at`` anchors the wave's
+    launch->ready wall clock, so a wave that queued behind earlier
+    in-flight work reports the wait it actually saw.
+    """
+
+    outs: Dict[str, jnp.ndarray]
+    sides: list
+    compiled: CompiledModel
+    n_cc: int
+    lanes: int
+    wave_slots: int
+    launched_at: float
 
 
 def _k2p_model_seconds(num_decisions: int) -> float:
@@ -523,7 +548,10 @@ class FusedModelExecutor:
     # -- program construction ----------------------------------------------
     @staticmethod
     def _tensor_sig(tensors: Dict[str, jnp.ndarray]) -> tuple:
-        return tuple(sorted((name, tuple(v.shape), str(jnp.asarray(v).dtype))
+        # shape/dtype read directly: numpy and jax arrays both carry them,
+        # and jnp.asarray here would device-copy host-side wave stacks
+        # just to build a cache key
+        return tuple(sorted((name, tuple(v.shape), str(v.dtype))
                             for name, v in tensors.items()))
 
     def _signature(self, compiled: CompiledModel,
@@ -620,7 +648,7 @@ class FusedModelExecutor:
         return fn, needed
 
     def _build_batch(self, compiled: CompiledModel, shared_needed: tuple,
-                     request_needed: tuple):
+                     request_needed: tuple, mesh: Optional[Mesh] = None):
         """One jitted program per (model, shared shapes, wave shapes): a
         ``lax.scan`` over the stacked per-request tensors whose body is the
         same fused kernel walk as the single-inference program.  Shared
@@ -628,13 +656,20 @@ class FusedModelExecutor:
         profiles; per-request graph inputs are profiled INSIDE the program
         (``profiler.batched_block_counts``, one fused reduction per
         (tensor, granularity) for the whole wave) -- each request is a new
-        graph, so its profiling is the runtime's job, not the host's."""
+        graph, so its profiling is the runtime's job, not the host's.
+
+        With a ``mesh`` (1-D, axis ``distributed.sharding.CORES_AXIS``) the
+        scan body is ``shard_map``-ed over the request axis: every device
+        runs the identical scan over ITS slice of the wave -- chips as the
+        paper's Computation Cores, the Alg. 8 task queue split by the
+        caller's cost-aware bins (``core.scheduler.assign_bins``).
+        Requests are independent (the scan carries nothing), so no
+        collectives are needed and per-request numerics are unchanged."""
         kernels = compiled.graph.topo_order()
         flows = self._resolved_flows(compiled)
         final = kernels[-1].out
 
-        def fused_wave(shared, shared_counts, batched):
-            self.trace_count += 1          # runs at trace time only
+        def wave_body(shared, shared_counts, batched):
             base: Dict[tuple, profiler.BlockProfile] = {
                 (name, blk): profiler.BlockProfile(
                     counts, tuple(shared[name].shape), blk)
@@ -657,6 +692,23 @@ class FusedModelExecutor:
 
             _, (outs, sides) = jax.lax.scan(one, None, (batched, wave_counts))
             return outs, sides
+
+        if mesh is not None:
+            # shared + profiles replicated, the request axis sharded in AND
+            # out; check_rep off because the per-shard scans never touch a
+            # replicated output.
+            body = shard_map(
+                wave_body, mesh=mesh,
+                in_specs=(PartitionSpec(), PartitionSpec(),
+                          dist_sharding.wave_spec()),
+                out_specs=dist_sharding.wave_spec(),
+                check_rep=False)
+        else:
+            body = wave_body
+
+        def fused_wave(shared, shared_counts, batched):
+            self.trace_count += 1          # runs at trace time only
+            return body(shared, shared_counts, batched)
 
         return jax.jit(fused_wave, donate_argnums=(2,) if self.donate else ())
 
@@ -721,13 +773,115 @@ class FusedModelExecutor:
                                      fused_wall_seconds=wall)
 
     # -- batched (multi-tenant) execution -----------------------------------
+    def launch_batch(self, compiled: CompiledModel,
+                     shared: Dict[str, jnp.ndarray],
+                     batched: Dict[str, jnp.ndarray],
+                     mesh: Optional[Mesh] = None) -> "PendingWave":
+        """Dispatch one wave WITHOUT blocking: the asynchronous half of
+        :meth:`run_batch`.
+
+        Returns a :class:`PendingWave` whose arrays are in flight; pass it
+        to :meth:`finish_batch` to block and collect ``(outs, report)``.
+        The split lets a serving layer keep several waves in the XLA
+        queue while the host pads the next one (``serving.scheduler``'s
+        dispatch lanes); the pending wave's wall clock runs from launch to
+        ready, so queue time behind earlier in-flight waves is measured,
+        not hidden."""
+        n_cc = self.n_cc or compiled.partition.n_cc
+        flows = self._resolved_flows(compiled)
+        needed = self._needed_inputs(flows)
+        missing = [n for n, _ in needed
+                   if n not in shared and n not in batched]
+        if missing:
+            raise KeyError(f"wave inputs missing tensors: {missing}")
+        shared_needed = tuple((n, b) for n, b in needed if n in shared)
+        request_needed = tuple((n, b) for n, b in needed if n in batched)
+
+        lanes = 1
+        if mesh is not None:
+            if (len(mesh.axis_names) != 1
+                    or mesh.axis_names[0] != dist_sharding.CORES_AXIS):
+                raise ValueError(
+                    f"run_batch mesh must be 1-D over "
+                    f"{dist_sharding.CORES_AXIS!r}, got {mesh.axis_names}")
+            lanes = int(mesh.devices.size)
+            b = int(next(iter(batched.values())).shape[0])
+            if b % lanes:
+                raise ValueError(
+                    f"wave of {b} slots not divisible by {lanes} mesh "
+                    f"devices")
+
+        # the shard_map program closes over the CONCRETE mesh, so the key
+        # carries the device identities, not just the lane count -- two
+        # same-size meshes over different device groups must not share a
+        # program.  A serving engine pinned to one mesh still gets exactly
+        # one trace per (bucket, lane count).
+        mesh_key = (None if mesh is None
+                    else tuple(d.id for d in mesh.devices.flat))
+        key = ("wave", mesh_key,
+               self._signature(compiled, shared), self._tensor_sig(batched))
+        fn = self._programs.get(key)
+        if fn is not None:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            fn = self._build_batch(compiled, shared_needed, request_needed,
+                                   mesh=mesh)
+            self._programs[key] = fn
+
+        if mesh is not None:
+            # commit the stacked request tensors to their wave sharding up
+            # front: host-side stacks transfer as one host->shard split per
+            # device instead of staging the full stack on one device and
+            # resharding from there.
+            batched = jax.device_put(
+                batched, dist_sharding.wave_shardings(mesh, batched))
+
+        shared_counts = self._input_counts(shared_needed, shared)
+        b_sz = int(next(iter(batched.values())).shape[0])
+        t0 = time.perf_counter()
+        outs, sides = fn(shared, shared_counts, batched)
+        return PendingWave(outs=outs, sides=sides, compiled=compiled,
+                           n_cc=n_cc, lanes=lanes, wave_slots=b_sz,
+                           launched_at=t0)
+
+    def finish_batch(self, pending: "PendingWave"
+                     ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
+        """Block on a :meth:`launch_batch` wave and assemble its report
+        (the synchronous half of :meth:`run_batch`)."""
+        outs, sides = pending.outs, pending.sides
+        jax.block_until_ready((outs, sides))
+        wall = time.perf_counter() - pending.launched_at
+
+        topo = pending.compiled.graph.topo_order()
+        self.profiled_densities = {
+            k.out: side[3] for k, side in zip(topo, sides)}   # (B, ...)
+        if self.keep_codes:
+            self.planned_codes = {
+                k.out: np.asarray(side[0]) for k, side in zip(topo, sides)}
+        reports = []
+        if self.collect_report:
+            for b in range(pending.wave_slots):
+                for k, (codes, dens_x, dens_y, _) in zip(topo, sides):
+                    rep = _bookkeep_kernel(k, codes[b], dens_x[b], dens_y[b],
+                                           pending.n_cc, self.model)
+                    rep.name = f"{k.name}[{b}]"
+                    reports.append(rep)
+        return outs, InferenceReport(reports, self.strategy,
+                                     fused_wall_seconds=wall,
+                                     wave_slots=pending.wave_slots,
+                                     wave_lanes=pending.lanes)
+
     def run_batch(self, compiled: CompiledModel,
                   shared: Dict[str, jnp.ndarray],
-                  batched: Dict[str, jnp.ndarray]
+                  batched: Dict[str, jnp.ndarray],
+                  mesh: Optional[Mesh] = None
                   ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
         """One jitted call serving a WAVE of stacked inferences.
 
-        The multi-tenant entry point behind ``serving.graph_engine``:
+        The multi-tenant entry point behind ``serving.graph_engine``
+        (:meth:`launch_batch` + :meth:`finish_batch`; use the split pair
+        directly to keep several waves in flight):
 
         * ``shared`` -- tensors common to every request of the wave (the
           model weights), profiled once per tensor identity on the host
@@ -743,53 +897,24 @@ class FusedModelExecutor:
         ``(B, ...)`` and ``report`` is WAVE-level: ``fused_wall_seconds`` is
         the one dispatch's wall clock, and (with ``collect_report=True``)
         ``kernels`` holds per-request bookkeeping entries named
-        ``"{kernel}[b]"``.  With ``donate=True`` the stacked request buffers
-        are donated, so steady-state waves reuse them in place.  Programs
-        cache per (model structure, shared signature, wave signature) --
-        a serving engine that pads waves to a fixed slot count gets exactly
-        one trace per shape bucket.
+        ``"{kernel}[b]"``.  With ``donate=True`` the stacked request
+        buffers are OFFERED for donation; XLA reuses them in place only
+        when an output can alias them (the CPU backend often cannot and
+        says so with a "donated buffers were not usable" UserWarning --
+        donation is an optimization, never a correctness knob).  Programs
+        cache per (model structure, shared signature, wave signature,
+        lane count) -- a serving engine that pads waves to a fixed slot
+        count gets exactly one trace per (shape bucket, lane count).
+
+        ``mesh`` (a 1-D ``cores`` mesh from ``distributed.sharding
+        .cores_mesh``) shards the wave's request axis across its devices:
+        device d scans slots ``[d*B/D, (d+1)*B/D)``, so the caller should
+        place requests into slots by cost-aware bins
+        (``core.scheduler.assign_bins``; ``serving.graph_engine`` does).
+        Requires ``B % D == 0``.  Outputs are bitwise-identical to the
+        unsharded program -- sharding splits the task queue, never the
+        numerics -- which collapses to the same single-lane scan on a
+        1-device mesh.
         """
-        n_cc = self.n_cc or compiled.partition.n_cc
-        flows = self._resolved_flows(compiled)
-        needed = self._needed_inputs(flows)
-        missing = [n for n, _ in needed
-                   if n not in shared and n not in batched]
-        if missing:
-            raise KeyError(f"wave inputs missing tensors: {missing}")
-        shared_needed = tuple((n, b) for n, b in needed if n in shared)
-        request_needed = tuple((n, b) for n, b in needed if n in batched)
-
-        key = ("wave", self._signature(compiled, shared),
-               self._tensor_sig(batched))
-        fn = self._programs.get(key)
-        if fn is not None:
-            self.cache_hits += 1
-        else:
-            self.cache_misses += 1
-            fn = self._build_batch(compiled, shared_needed, request_needed)
-            self._programs[key] = fn
-
-        shared_counts = self._input_counts(shared_needed, shared)
-        t0 = time.perf_counter()
-        outs, sides = fn(shared, shared_counts, batched)
-        jax.block_until_ready((outs, sides))
-        wall = time.perf_counter() - t0
-
-        topo = compiled.graph.topo_order()
-        self.profiled_densities = {
-            k.out: side[3] for k, side in zip(topo, sides)}   # (B, ...)
-        if self.keep_codes:
-            self.planned_codes = {
-                k.out: np.asarray(side[0]) for k, side in zip(topo, sides)}
-        b_sz = int(next(iter(batched.values())).shape[0])
-        reports = []
-        if self.collect_report:
-            for b in range(b_sz):
-                for k, (codes, dens_x, dens_y, _) in zip(topo, sides):
-                    rep = _bookkeep_kernel(k, codes[b], dens_x[b], dens_y[b],
-                                           n_cc, self.model)
-                    rep.name = f"{k.name}[{b}]"
-                    reports.append(rep)
-        return outs, InferenceReport(reports, self.strategy,
-                                     fused_wall_seconds=wall,
-                                     wave_slots=b_sz)
+        return self.finish_batch(
+            self.launch_batch(compiled, shared, batched, mesh=mesh))

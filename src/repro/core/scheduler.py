@@ -13,7 +13,12 @@ provide:
   accelerators do), for the load-balance comparison benchmarks.
 * ``schedule_lpt``      -- Longest-Processing-Time bins: a beyond-paper
   improvement when all costs are known up front (the Analyzer predicts them),
-  strictly dominating the on-line greedy queue.
+  strictly dominating the on-line greedy queue.  Accepts an optional
+  per-core ``capacity`` (max tasks per bin) for fixed-slot consumers.
+* ``assign_bins``       -- the bin-ASSIGNMENT view of ``schedule_lpt``: a
+  per-task core index array, the request->device map the sharded serving
+  path consumes (each mesh device is a Computation Core, each wave slot a
+  task; DESIGN.md section 12).
 * ``steal_rebalance``   -- work stealing pass: straggler mitigation for the
   host-runtime engine (cores whose bin exceeds the mean by `threshold` donate
   their cheapest tasks to the most idle core).
@@ -22,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,8 +72,18 @@ def schedule_static(costs: Sequence[float], n_cores: int) -> Schedule:
                     "static")
 
 
-def schedule_lpt(costs: Sequence[float], n_cores: int) -> Schedule:
-    """Longest-Processing-Time-first bin packing (4/3-approx of optimum)."""
+def schedule_lpt(costs: Sequence[float], n_cores: int,
+                 capacity: Optional[int] = None) -> Schedule:
+    """Longest-Processing-Time-first bin packing (4/3-approx of optimum).
+
+    ``capacity`` caps the number of tasks per core: a full core drops out
+    of the idle heap, so the pack stays feasible for fixed-slot consumers
+    (a mesh device serving ``slots // n_devices`` wave slots).  Requires
+    ``n_cores * capacity >= len(costs)`` when set.
+    """
+    if capacity is not None and n_cores * capacity < len(costs):
+        raise ValueError(
+            f"{len(costs)} tasks exceed {n_cores} cores x {capacity} slots")
     order = np.argsort(-np.asarray(costs, dtype=float), kind="stable")
     heap: List[Tuple[float, int]] = [(0.0, c) for c in range(n_cores)]
     heapq.heapify(heap)
@@ -76,9 +91,28 @@ def schedule_lpt(costs: Sequence[float], n_cores: int) -> Schedule:
     for t in order:
         avail, core = heapq.heappop(heap)
         assignment[core].append(int(t))
-        heapq.heappush(heap, (avail + float(costs[t]), core))
+        if capacity is None or len(assignment[core]) < capacity:
+            heapq.heappush(heap, (avail + float(costs[t]), core))
     core_time = np.array([float(np.sum([costs[t] for t in a])) for a in assignment])
     return Schedule(assignment, core_time, float(core_time.max(initial=0.0)), "lpt")
+
+
+def assign_bins(costs: Sequence[float], n_bins: int,
+                capacity: Optional[int] = None) -> np.ndarray:
+    """Cost-aware task->bin map: ``(len(costs),)`` int array of bin ids.
+
+    The assignment view of :func:`schedule_lpt` -- the serving path's
+    request->device binning (Algorithm 8's cost-aware task->Computation
+    Core assignment with chips as cores): balanced makespan over the
+    Analyzer-predicted per-request costs instead of a mere dispatch
+    order, with ``capacity`` matching each device's fixed slot count.
+    """
+    sched = schedule_lpt(costs, n_bins, capacity)
+    bins = np.zeros(len(costs), dtype=np.int64)
+    for core, tasks in enumerate(sched.assignment):
+        for t in tasks:
+            bins[t] = core
+    return bins
 
 
 def steal_rebalance(schedule: Schedule, costs: Sequence[float],

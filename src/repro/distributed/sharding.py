@@ -24,7 +24,41 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["NamedSharding", "P", "batch_axes", "param_spec",
            "param_shardings", "cache_spec", "cache_shardings",
-           "batch_spec", "batch_shardings", "replicated", "describe"]
+           "batch_spec", "batch_shardings", "replicated", "describe",
+           "CORES_AXIS", "cores_mesh", "wave_spec", "wave_shardings"]
+
+# the serving mesh axis: each device along it plays one of the paper's
+# Computation Cores, executing its own slice of an admission wave
+# (DESIGN.md section 12).
+CORES_AXIS = "cores"
+
+
+def cores_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D serving mesh over ``CORES_AXIS``.
+
+    Uses the first ``n_devices`` local devices (all of them by default).
+    A 1-device mesh is valid and makes the sharded wave dispatch collapse
+    to the single-lane program (bitwise-identical outputs, tested).
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if not 0 < n_devices <= len(devs):
+            raise ValueError(
+                f"cores_mesh({n_devices}) with {len(devs)} devices visible")
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (CORES_AXIS,))
+
+
+def wave_spec() -> P:
+    """Spec for stacked per-request wave tensors ``(B, ...)``: the request
+    axis shards over ``CORES_AXIS``, everything per-request stays local."""
+    return P(CORES_AXIS)
+
+
+def wave_shardings(mesh: Mesh, batched_abstract: Any) -> Any:
+    """NamedShardings placing every stacked wave leaf on the cores mesh."""
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, wave_spec()), batched_abstract)
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -47,9 +47,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import compiler, runtime
+from repro.core import scheduler as core_scheduler
 from repro.core.compiler import CompiledModel, GraphMeta
+from repro.core.perf_model import Primitive
 from repro.data import graphs as graph_data
 from repro.models import gnn as gnn_models
 
@@ -90,6 +93,20 @@ class GraphResult:
         if self.deadline is None or self.completed_at is None:
             return None
         return self.completed_at <= self.deadline
+
+
+@dataclasses.dataclass
+class InFlightWave:
+    """A launched-but-unfinished admission wave (``begin_wave``'s handle):
+    the requests, their slot placement, and the executor's pending
+    dispatch.  Pass to ``finish_wave`` to block and collect results."""
+
+    bucket: int
+    wave: List[GraphRequest]
+    slot_of: List[int]
+    pending: runtime.PendingWave
+    final: str                      # env name of the model's output tensor
+    index: int                      # admission wave index (GraphResult.wave)
 
 
 def random_requests(n_requests: int, *, f_in: int,
@@ -151,6 +168,14 @@ class GraphServeEngine:
     ``min_bucket`` floors the bucket ladder (buckets are the next power of
     two >= the request's vertex count); ``align`` follows the test-scale
     partitioning convention of ``models.gnn.build_dense``.
+
+    ``mesh`` (a 1-D ``cores`` mesh, ``distributed.sharding.cores_mesh``)
+    device-shards every wave: requests are LPT-binned into per-device
+    slot ranges by predicted cost (:meth:`request_cost`) and each device
+    scans its own range (DESIGN.md section 12).  Outputs stay bitwise
+    identical -- on any mesh -- and the trace bound becomes one per
+    (bucket, lane count); ``slots`` must divide by the mesh's device
+    count.
     """
 
     def __init__(self, model: str = "gcn", *, f_in: int, hidden: int = 16,
@@ -161,10 +186,22 @@ class GraphServeEngine:
                  strategy: str = "dynamic", n_cc: int = 7, align: int = 16,
                  on_chip_bytes: int = 256 * 1024,
                  donate: bool = True, collect_report: bool = False,
-                 keep_codes: bool = False):
+                 keep_codes: bool = False, mesh: Optional[Mesh] = None):
         self.spec = gnn_models.make_model_spec(model, f_in, hidden, n_classes)
         self.f_in = f_in
         self.slots = slots
+        # device-sharded dispatch (DESIGN.md section 12): a 1-D ``cores``
+        # mesh splits every wave's slots evenly over its devices -- chips
+        # as the paper's Computation Cores.  Requests are placed into each
+        # device's slot range by cost-aware LPT bins
+        # (``core.scheduler.assign_bins`` over per-request perf_model
+        # costs) so the per-device scans finish together.
+        self.mesh = mesh
+        self.lanes = 1 if mesh is None else int(mesh.devices.size)
+        if slots % self.lanes:
+            raise ValueError(
+                f"slots={slots} not divisible by the {self.lanes}-device "
+                f"cores mesh")
         # keep the documented pad-to-pow2 contract whatever floor is passed
         self.min_bucket = 1 << (max(min_bucket, 2) - 1).bit_length()
         self.strategy = strategy
@@ -188,6 +225,9 @@ class GraphServeEngine:
         self.waves = 0
         self.served = 0
         self.wave_walls: List[float] = []
+        # per-wave (real, slots) occupancy: the padding-efficiency series
+        # the serving benchmark reports (real/slots per wave)
+        self.wave_loads: List[Tuple[int, int]] = []
         # per-bucket dispatch walls: what the continuous scheduler's EWMA
         # wave-wall estimator seeds from (DESIGN.md section 11)
         self.bucket_walls: Dict[int, List[float]] = {}
@@ -327,6 +367,122 @@ class GraphServeEngine:
         return out
 
     # -- execution ----------------------------------------------------------
+    def request_cost(self, req: GraphRequest) -> float:
+        """Analyzer-predicted cost of one request (relative units).
+
+        The perf_model Table IV cost of the request's dominant Aggregate
+        product at its measured adjacency/feature densities -- the same
+        model the K2P planner minimizes over, applied at request
+        granularity.  Feeds ``core.scheduler.assign_bins`` so the sharded
+        dispatch packs each mesh device an even predicted load (Algorithm
+        8's cost-aware task->core assignment with requests as tasks).
+
+        Memoized on the request object (requests are treated as immutable
+        once validated at the admission edge), so re-serving one never
+        re-scans its O(n^2) tensors on the dispatch path.  The memo is
+        keyed by the engine's (cost model, f_in) -- a request shared
+        between engines with different models is re-costed, not reused.
+        """
+        memo_key = (self.executor.model, self.f_in)
+        cached = getattr(req, "_dynasparse_cost", None)
+        if cached is not None and cached[0] == memo_key:
+            return cached[1]
+        adj = np.asarray(req.adjacency)
+        feat = np.asarray(req.features)
+        n = max(req.n_vertices, 1)
+        d_adj = float(np.count_nonzero(adj)) / max(adj.size, 1)
+        d_feat = float(np.count_nonzero(feat)) / max(feat.size, 1)
+        model = self.executor.model
+        prim = model.select(d_adj, d_feat)
+        cost = (0.0 if prim == Primitive.SKIP else
+                float(model.cycles(prim, n, n, self.f_in, d_adj, d_feat)))
+        req._dynasparse_cost = (memo_key, cost)
+        return cost
+
+    def _slot_layout(self, wave: Sequence[GraphRequest]) -> List[int]:
+        """Request -> slot placement for one wave.
+
+        Unsharded (or single-device) waves keep the FIFO layout.  On a
+        multi-device mesh, device d owns the contiguous slot range
+        ``[d*slots/lanes, (d+1)*slots/lanes)``; requests are LPT-binned
+        over the per-request perf_model costs (capacity = each device's
+        slot count) so every device's scan carries a balanced predicted
+        load, and dummies fill whatever slots remain.  Placement never
+        affects numerics (request isolation), only load balance.
+        """
+        if self.lanes == 1:
+            return list(range(len(wave)))
+        per_lane = self.slots // self.lanes
+        bins = core_scheduler.assign_bins(
+            [self.request_cost(r) for r in wave], self.lanes,
+            capacity=per_lane)
+        next_slot = [lane * per_lane for lane in range(self.lanes)]
+        slots = []
+        for lane in bins:
+            slots.append(next_slot[lane])
+            next_slot[lane] += 1
+        return slots
+
+    def begin_wave(self, bucket: int, wave: Sequence[GraphRequest]
+                   ) -> "InFlightWave":
+        """Launch one admission wave WITHOUT blocking: pad each request to
+        ``bucket`` (dummies fill the unused slots), place requests into
+        slots by the cost-aware layout (:meth:`_slot_layout`), and hand the
+        stacked tensors to ``FusedModelExecutor.launch_batch``.
+
+        Returns an :class:`InFlightWave`; :meth:`finish_wave` blocks on it
+        and yields the results.  The split is what the continuous
+        scheduler's dispatch lanes pull on: a lane can launch its wave
+        while earlier waves still execute, overlapping host padding with
+        device compute.
+        """
+        if not 0 < len(wave) <= self.slots:
+            raise ValueError(
+                f"wave of {len(wave)} requests (engine slots={self.slots})")
+        cm = self._compile(bucket)
+        slot_of = self._slot_layout(wave)
+        padded: List[Optional[Dict[str, np.ndarray]]] = [None] * self.slots
+        for req, slot in zip(wave, slot_of):
+            padded[slot] = self._padded(req, bucket)
+        for slot, p in enumerate(padded):
+            if p is None:                    # dummy slot: all-SKIP plans
+                padded[slot] = self._zero_tensors(bucket)
+        # sharded waves stay host-side here: launch_batch device_puts them
+        # straight onto the mesh (one host->per-device-shard transfer);
+        # staging through jnp.asarray first would land the full stack on
+        # one device and reshard from there.
+        batched = {name: np.stack([p[name] for p in padded])
+                   for name in self._input_names[bucket]}
+        if self.mesh is None:
+            batched = {name: jnp.asarray(v) for name, v in batched.items()}
+        pending = self.executor.launch_batch(cm, self.weights, batched,
+                                             mesh=self.mesh)
+        index = self.waves
+        self.waves += 1
+        return InFlightWave(bucket=bucket, wave=list(wave), slot_of=slot_of,
+                            pending=pending,
+                            final=cm.graph.kernels[-1].out, index=index)
+
+    def finish_wave(self, inflight: "InFlightWave") -> List[GraphResult]:
+        """Block on a :meth:`begin_wave` launch, record the serving
+        counters (``served``/``wave_walls``/``wave_loads``/
+        ``bucket_walls``), stamp the wave report
+        (``last_wave_report.wave_real``), and slice per-request results
+        back out (wave order)."""
+        outs, rep = self.executor.finish_batch(inflight.pending)
+        rep.wave_real = len(inflight.wave)
+        self.last_wave_report = rep
+        arr = np.asarray(outs[inflight.final])
+        results = [GraphResult(req.request_id, arr[slot, : req.n_vertices],
+                               inflight.bucket, inflight.index)
+                   for slot, req in zip(inflight.slot_of, inflight.wave)]
+        self.served += len(inflight.wave)
+        self.wave_walls.append(rep.fused_wall_seconds)
+        self.wave_loads.append((len(inflight.wave), self.slots))
+        self.bucket_walls.setdefault(inflight.bucket, []).append(
+            rep.fused_wall_seconds)
+        return results
+
     def dispatch_wave(self, bucket: int, wave: Sequence[GraphRequest]
                       ) -> List[GraphResult]:
         """Execute one admission wave: pad each request to ``bucket``, fill
@@ -336,31 +492,16 @@ class GraphServeEngine:
         This is the reusable backend step behind both :meth:`serve` and the
         continuous scheduler (``serving.scheduler.ContinuousGraphServer``);
         it owns the serving counters (``waves``/``served``/``wave_walls``/
-        ``bucket_walls``) and stamps the wave's real-slot count into the
-        report (``last_wave_report.wave_real``).
+        ``bucket_walls``/``wave_loads``) and stamps the wave's real-slot
+        count into the report (``last_wave_report.wave_real``).  With a
+        ``cores`` mesh the dispatch is device-sharded: requests are placed
+        into per-device slot ranges by cost-aware LPT bins
+        (:meth:`_slot_layout`) and ``run_batch`` scans each device's range
+        on its own device.  :meth:`begin_wave`/:meth:`finish_wave` are the
+        non-blocking halves (the continuous scheduler's lanes use them to
+        keep several waves in flight).
         """
-        if not 0 < len(wave) <= self.slots:
-            raise ValueError(
-                f"wave of {len(wave)} requests (engine slots={self.slots})")
-        cm = self._compile(bucket)
-        final = cm.graph.kernels[-1].out
-        padded = [self._padded(req, bucket) for req in wave]
-        padded += [self._zero_tensors(bucket)] * (self.slots - len(wave))
-        batched = {name: jnp.asarray(np.stack([p[name] for p in padded]))
-                   for name in self._input_names[bucket]}
-        outs, rep = self.executor.run_batch(cm, self.weights, batched)
-        rep.wave_real = len(wave)
-        self.last_wave_report = rep
-        arr = np.asarray(outs[final])
-        results = [GraphResult(req.request_id, arr[slot, : req.n_vertices],
-                               bucket, self.waves)
-                   for slot, req in enumerate(wave)]
-        self.waves += 1
-        self.served += len(wave)
-        self.wave_walls.append(rep.fused_wall_seconds)
-        self.bucket_walls.setdefault(bucket, []).append(
-            rep.fused_wall_seconds)
-        return results
+        return self.finish_wave(self.begin_wave(bucket, wave))
 
     def serve(self, requests: Sequence[GraphRequest]) -> List[GraphResult]:
         """Serve a batch of queries; results in request order."""

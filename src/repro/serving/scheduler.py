@@ -24,9 +24,11 @@ that online layer (DESIGN.md section 11):
   ``"deadline"``), or the oldest request has waited ``max_wait``
   regardless of deadline (reason ``"age"`` -- the starvation-freedom
   backstop for deadline-less traffic).  The wait bound
-  is the bucket's estimated wave wall PLUS one estimated wave from every
-  other bucket with queued work (the dispatch lane is serial, and those
-  buckets' waves may cut in the same tick and go first), scaled by
+  is the LPT makespan, over the ``n_lanes`` dispatch lanes, of the
+  bucket's estimated wave wall plus one estimated wave from every
+  other bucket with queued work (those buckets' waves may cut in the same
+  tick, and busy lanes delay this one; with one lane this is the serial
+  sum), scaled by
   ``slack_margin``; per-bucket wave-wall estimates are an EWMA over
   observed dispatch walls, cold-started from the engine's recorded
   ``bucket_walls``/``wave_walls`` (or ``cold_start_wall`` when the bucket
@@ -90,6 +92,7 @@ class WaveLog:
     reason: str                     # "full" | "deadline" | "age" | "drain"
     cut_at: float                   # clock time the cut decision was made
     wall: float                     # dispatch wall seconds (engine-measured)
+    lane: int = 0                   # dispatch lane the wave was pulled by
 
 
 class _EwmaWall:
@@ -132,9 +135,13 @@ class ContinuousGraphServer:
       composition, never numerics -- and ``engine.executor.trace_count``
       still grows by at most one per shape bucket;
     * within one :meth:`poll` tick, cut waves dispatch in LPT order over
-      the per-bucket EWMA wall estimates (urgent deadline/age cuts first);
+      the per-bucket EWMA wall estimates (urgent deadline/age cuts first),
+      each pulled by the earliest-idle of the ``n_lanes`` dispatch lanes
+      (one lane per device group; defaults to the engine's cores-mesh
+      device count, 1 when unsharded) -- the deadline-slack wait bound is
+      the LPT makespan over the lanes, not the serial sum;
     * ``dispatch_log`` records every wave (bucket, real slots, cut reason,
-      measured wall) for tests and observability.
+      measured wall, pulling lane) for tests and observability.
 
     ``slack_margin`` scales the wait bound in the slack comparison (>1
     cuts earlier; the default 1.5 buys headroom against wall variance and
@@ -147,7 +154,8 @@ class ContinuousGraphServer:
                  cold_start_wall: float = 0.05,
                  slack_margin: float = 1.5,
                  batch_patience: float = 1.0,
-                 max_wait: float = 0.25):
+                 max_wait: float = 0.25,
+                 n_lanes: Optional[int] = None):
         if not 0.0 < ewma_alpha <= 1.0:
             raise ValueError(f"ewma_alpha {ewma_alpha} not in (0, 1]")
         self.engine = engine
@@ -157,8 +165,30 @@ class ContinuousGraphServer:
         self.slack_margin = slack_margin
         self.batch_patience = batch_patience
         self.max_wait = max_wait
+        # dispatch lanes: one per device group (default: one per device of
+        # the engine's cores mesh; 1 when unsharded).  Waves cut in one
+        # tick are pulled by the earliest-idle lane, so the wait a queued
+        # request sees is the LPT makespan over the lanes, not the serial
+        # sum -- ``wait_bound`` models exactly that.
+        n_lanes = engine.lanes if n_lanes is None else int(n_lanes)
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes {n_lanes} < 1")
+        self.n_lanes = n_lanes
         self._queues: Dict[int, List[QueuedRequest]] = {}
         self._ewma: Dict[int, _EwmaWall] = {}
+        # per-lane EWMA of the wave walls that lane pulled (observability +
+        # the lane-balance tests); cold-started like a never-run bucket.
+        self._lane_ewma: List[_EwmaWall] = [
+            _EwmaWall(ewma_alpha, None, cold_start_wall)
+            for _ in range(n_lanes)]
+        # round-robin tie-break for idle-lane selection: ticks that cut a
+        # single wave would otherwise always pick lane 0, leaving the
+        # other lanes' EWMA walls frozen at cold start.
+        self._next_lane = 0
+        # results harvested during a tick that then failed mid-dispatch:
+        # the next poll()/drain() delivers them (results must never be
+        # dropped once their wave completed).
+        self._undelivered: List[GraphResult] = []
         self._seq = 0
         self.dispatch_log: List[WaveLog] = []
         self.submitted = 0
@@ -212,17 +242,52 @@ class ContinuousGraphServer:
             self._ewma[bucket] = est
         return est
 
+    def lane_estimate(self, lane: int) -> float:
+        """Current EWMA wave-wall estimate for dispatch ``lane`` (seconds):
+        the walls of the waves that lane has pulled so far."""
+        return self._lane_ewma[lane].value
+
+    @property
+    def pipeline_depth(self) -> int:
+        """Waves actually kept in flight at once: capped at two whatever
+        the lane count -- depth 2 already hides all host prep behind
+        device compute, and deeper queues only pile programs onto the
+        shared device set (lanes are device groups of ONE mesh, not
+        disjoint hardware).  ``wait_bound`` packs over this same depth so
+        the slack model matches what ``_dispatch`` really does."""
+        return min(self.n_lanes, 2)
+
     # -- wave cutting -------------------------------------------------------
     def wait_bound(self, bucket: int) -> float:
-        """Worst-case wait (seconds) for a wave cut from ``bucket`` NOW:
-        its own estimated wall plus one estimated wave from every OTHER
-        bucket with queued work -- the dispatch lane is serial and those
-        buckets may cut in the same tick and be packed first -- scaled by
-        ``slack_margin``."""
-        bound = self.estimate(bucket)
+        """Worst-case wait (seconds) for a wave cut from ``bucket`` NOW.
+
+        Single lane: the bucket's estimated wall plus one estimated wave
+        from every OTHER bucket with queued work (those waves may cut in
+        the same tick and be packed first), scaled by ``slack_margin``.
+
+        Multi-lane: the LPT makespan of the same waves packed over the
+        ACTUAL in-flight concurrency (``pipeline_depth``, not the lane
+        count -- modeling more concurrency than ``_dispatch`` provides
+        would defer deadline cuts past rescue), with each wave costed at
+        no less than the average per-lane EWMA wall.  Lane walls are
+        measured launch->ready, so when in-flight waves contend on the
+        shared device set they inflate and the bound converges back
+        toward the serial sum; with no contention they stay at the device
+        wall and the bound tightens honestly.
+        """
+        if self.n_lanes == 1:
+            bound = self.estimate(bucket)
+            for b, q in self._queues.items():
+                if b != bucket and q:
+                    bound += self.estimate(b)
+            return bound * self.slack_margin
+        lane_wall = float(np.mean([e.value for e in self._lane_ewma]))
+        costs = [max(self.estimate(bucket), lane_wall)]
         for b, q in self._queues.items():
             if b != bucket and q:
-                bound += self.estimate(b)
+                costs.append(max(self.estimate(b), lane_wall))
+        bound = core_scheduler.schedule_lpt(
+            costs, self.pipeline_depth).makespan
         return bound * self.slack_margin
 
     def _cut_reason(self, bucket: int, queue: List[QueuedRequest],
@@ -308,20 +373,75 @@ class ContinuousGraphServer:
         return self._dispatch(self._cut_ready(self.clock(), drain=True))
 
     def _dispatch(self, ready: List[tuple]) -> List[GraphResult]:
-        results: List[GraphResult] = []
-        for bucket, wave, reason, cut_at in self._pack_order(ready):
-            wave_results = self.engine.dispatch_wave(
-                bucket, [e.request for e in wave])
+        """Dispatch the tick's cut waves over the ``n_lanes`` lanes.
+
+        Each wave is pulled by the earliest-idle lane (greedy Algorithm-8
+        queue over the per-bucket estimates; deterministic under a fake
+        clock).  Waves stay IN FLIGHT via the engine's
+        ``begin_wave``/``finish_wave`` split -- a lane launches its wave
+        while earlier waves still execute, so host padding overlaps device
+        compute -- but the pipeline depth is capped at TWO regardless of
+        lane count: depth 2 already hides all host prep behind device
+        compute, and deeper queues only pile programs onto the shared
+        device set (lanes are device *groups* of one mesh here, not
+        disjoint hardware), measurably hurting wave walls.  Waves are
+        harvested in launch order; the measured launch->ready wall feeds
+        both the bucket EWMA and the pulling lane's EWMA (the contention
+        signal ``wait_bound`` reads).  With one lane this degenerates to
+        the serial launch-then-finish loop.
+        """
+        # start from any results stranded by a previously failed tick;
+        # harvest appends into this same list, so even if THIS tick fails
+        # mid-dispatch, everything harvested stays in _undelivered and the
+        # next tick returns it
+        results = self._undelivered
+        lane_busy = [0.0] * self.n_lanes
+        depth = self.pipeline_depth
+        in_flight: List[tuple] = []        # (lane, est, wave-entries,
+        #                                     reason, cut_at, InFlightWave)
+
+        def harvest(item) -> None:
+            lane, est, wave, reason, cut_at, handle = item
+            wave_results = self.engine.finish_wave(handle)
+            lane_busy[lane] -= est         # the lane is free again
             done_at = self.clock()
-            wall = self.engine.bucket_walls[bucket][-1]
-            self._ewma_for(bucket).observe(wall)
+            wall = self.engine.bucket_walls[handle.bucket][-1]
+            self._ewma_for(handle.bucket).observe(wall)
+            self._lane_ewma[lane].observe(wall)
             self.dispatch_log.append(WaveLog(
-                bucket, len(wave), reason, cut_at, wall))
+                handle.bucket, len(wave), reason, cut_at, wall, lane))
             self.dispatched += len(wave)
             for entry, res in zip(wave, wave_results):
                 res.deadline = entry.deadline
                 res.completed_at = done_at
                 results.append(res)
+
+        try:
+            for bucket, wave, reason, cut_at in self._pack_order(ready):
+                while len(in_flight) >= depth:
+                    harvest(in_flight.pop(0))
+                # earliest-idle lane; ties rotate from _next_lane so every
+                # lane pulls waves (and keeps its EWMA wall live) even when
+                # ticks cut one wave at a time
+                lane = min(range(self.n_lanes),
+                           key=lambda l: (lane_busy[l],
+                                          (l - self._next_lane)
+                                          % self.n_lanes))
+                self._next_lane = (lane + 1) % self.n_lanes
+                est = self.estimate(bucket)
+                handle = self.engine.begin_wave(
+                    bucket, [e.request for e in wave])
+                lane_busy[lane] += est
+                in_flight.append((lane, est, wave, reason, cut_at, handle))
+        finally:
+            # a begin_wave failure mid-tick must not abandon the waves
+            # already in flight: harvest them so their results stream
+            # (via _undelivered if the exception propagates), the engine
+            # counters stay consistent, and open-loop pollers don't hang
+            # on requests that silently vanished
+            while in_flight:
+                harvest(in_flight.pop(0))
+        self._undelivered = []
         return results
 
     # -- warmup -------------------------------------------------------------

@@ -1,0 +1,123 @@
+"""core.scheduler unit coverage: steal_rebalance invariants + the bin API.
+
+``steal_rebalance`` had no direct test; its contract (DESIGN.md section 4)
+is pinned here with seeded sweeps over every base policy:
+
+* no task is lost or duplicated by stealing;
+* the makespan never gets WORSE than the input schedule (a steal only
+  happens when it strictly lowers the donor below the current peak);
+* ``core_time`` stays consistent with the assignment.
+
+The capacity-bounded ``schedule_lpt`` / ``assign_bins`` pair is the
+request->device binning the sharded wave dispatch consumes (DESIGN.md
+section 12), so its feasibility rules are pinned here too.
+"""
+import numpy as np
+import pytest
+
+from repro.core import scheduler
+
+POLICIES = (scheduler.schedule_dynamic, scheduler.schedule_static,
+            scheduler.schedule_lpt)
+
+
+def _tasks(assignment):
+    return sorted(t for bin_ in assignment for t in bin_)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", range(8))
+def test_steal_rebalance_invariants(policy, seed):
+    """Seeded sweep: stealing permutes tasks between cores, never loses or
+    duplicates one, and never worsens the predicted makespan."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 64))
+    cores = int(rng.integers(1, 9))
+    costs = rng.lognormal(0.0, 1.5, size=n)
+    base = policy(costs, cores)
+    out = scheduler.steal_rebalance(base, costs)
+    assert _tasks(out.assignment) == list(range(n))
+    assert out.makespan <= base.makespan + 1e-9
+    np.testing.assert_allclose(
+        out.core_time,
+        [float(np.sum([costs[t] for t in a])) for a in out.assignment],
+        rtol=1e-9, atol=1e-12)
+    assert out.makespan == pytest.approx(
+        float(out.core_time.max(initial=0.0)))
+    assert out.policy == base.policy + "+steal"
+
+
+def test_steal_rebalance_fixes_static_straggler():
+    """A contiguous split of skewed costs has an overloaded core; stealing
+    must strictly improve its makespan."""
+    costs = np.array([10.0, 9.0, 8.0, 0.1, 0.1, 0.1, 0.1, 0.1])
+    base = scheduler.schedule_static(costs, 4)       # core 0 gets 10+9
+    out = scheduler.steal_rebalance(base, costs)
+    assert out.makespan < base.makespan
+    assert _tasks(out.assignment) == list(range(len(costs)))
+
+
+def test_steal_rebalance_balanced_input_is_stable():
+    """An already-balanced LPT schedule is left untouched (determinism:
+    replaying the same schedule yields the same assignment)."""
+    costs = [1.0] * 8
+    base = scheduler.schedule_lpt(costs, 4)
+    out = scheduler.steal_rebalance(base, costs)
+    assert out.assignment == base.assignment
+    assert out.makespan == base.makespan
+
+
+def test_steal_rebalance_edge_cases():
+    """Empty task lists and more cores than tasks must not crash or move
+    anything below the threshold."""
+    empty = scheduler.steal_rebalance(
+        scheduler.schedule_dynamic([], 3), [])
+    assert empty.makespan == 0.0
+    assert _tasks(empty.assignment) == []
+    sparse = scheduler.steal_rebalance(
+        scheduler.schedule_dynamic([2.0], 4), [2.0])
+    assert _tasks(sparse.assignment) == [0]
+    assert sparse.makespan == 2.0
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_lpt_capacity_respected(seed):
+    """Capacity-bounded LPT: every bin holds at most ``capacity`` tasks,
+    every task is placed exactly once."""
+    rng = np.random.default_rng(seed)
+    bins = int(rng.integers(1, 7))
+    cap = int(rng.integers(1, 5))
+    n = int(rng.integers(0, bins * cap + 1))
+    costs = rng.lognormal(0.0, 1.0, size=n)
+    sched = scheduler.schedule_lpt(costs, bins, capacity=cap)
+    assert all(len(a) <= cap for a in sched.assignment)
+    assert _tasks(sched.assignment) == list(range(n))
+
+
+def test_lpt_capacity_infeasible_raises():
+    with pytest.raises(ValueError, match="exceed"):
+        scheduler.schedule_lpt([1.0] * 5, 2, capacity=2)
+
+
+def test_assign_bins_matches_schedule():
+    """The bin map is exactly the schedule's assignment, inverted."""
+    costs = [5.0, 1.0, 4.0, 2.0, 3.0, 1.0]
+    sched = scheduler.schedule_lpt(costs, 3, capacity=2)
+    bins = scheduler.assign_bins(costs, 3, capacity=2)
+    assert bins.shape == (len(costs),)
+    for core, tasks in enumerate(sched.assignment):
+        for t in tasks:
+            assert bins[t] == core
+    counts = np.bincount(bins, minlength=3)
+    assert counts.max() <= 2
+
+
+def test_assign_bins_balances_cost():
+    """Cost-aware binning beats the contiguous split on skewed costs: the
+    max-bin predicted load is no worse (the sharded dispatch's reason to
+    bin by cost instead of FIFO order)."""
+    costs = np.array([8.0, 7.0, 6.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    bins = scheduler.assign_bins(costs, 4, capacity=2)
+    lpt_max = max(costs[bins == b].sum() for b in range(4))
+    static_max = max(costs[2 * b: 2 * b + 2].sum() for b in range(4))
+    assert lpt_max <= static_max

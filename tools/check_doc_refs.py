@@ -50,6 +50,12 @@ PUBLIC = [
     # serving")
     ("repro.serving.scheduler", ["ContinuousGraphServer", "QueuedRequest",
                                  "WaveLog"]),
+    # the sharded-dispatch surface (DESIGN 12 / README "Sharding waves
+    # over a device mesh")
+    ("repro.distributed.sharding", ["cores_mesh", "wave_spec",
+                                    "wave_shardings", "CORES_AXIS"]),
+    ("repro.core.scheduler", ["schedule_lpt", "assign_bins",
+                              "steal_rebalance"]),
     ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS",
                           "init_spec_weights"]),
     ("repro.data.graphs", ["normalize_adjacency", "materialize"]),
@@ -58,11 +64,13 @@ PUBLIC = [
 # bound methods the docs name explicitly (an attribute rename must break
 # CI, not the reader)
 PUBLIC_ATTRS = [
-    ("repro.core.runtime", "FusedModelExecutor", ["run", "run_batch"]),
+    ("repro.core.runtime", "FusedModelExecutor",
+     ["run", "run_batch", "launch_batch", "finish_batch"]),
     ("repro.serving.graph_engine", "GraphServeEngine",
-     ["serve", "run_naive", "bucket_for", "cut_wave", "dispatch_wave"]),
+     ["serve", "run_naive", "bucket_for", "cut_wave", "dispatch_wave",
+      "begin_wave", "finish_wave", "request_cost"]),
     ("repro.serving.scheduler", "ContinuousGraphServer",
-     ["submit", "poll", "drain", "warmup", "wait_bound"]),
+     ["submit", "poll", "drain", "warmup", "wait_bound", "lane_estimate"]),
 ]
 
 
