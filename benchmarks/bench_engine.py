@@ -35,13 +35,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, geomean
-from repro.core import analyzer, runtime, scheduler
+from repro.core import analyzer, compiler, runtime, scheduler
 from repro.core.ir import Activation, AggOp, KernelType
-from repro.core.perf_model import FPGACostModel, Primitive
+from repro.core.perf_model import FPGACostModel, Format, Primitive, \
+    TPUCostModel
 from repro.core.profiler import block_density
+from repro.data import graphs as graph_data
 from repro.models import gnn as gnn_models
 
 _OUT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+
+
+def _merge_json(update: dict) -> None:
+    """Merge ``update`` into BENCH_engine.json, preserving other sections
+    (the engine-ladder rows and the format sweep write independently)."""
+    data = json.loads(_OUT.read_text()) if _OUT.exists() else {}
+    data.update(update)
+    _OUT.write_text(json.dumps(data, indent=2) + "\n")
 
 
 class SeedHostLoopEngine:
@@ -131,6 +141,112 @@ def _time_paired(fns, repeats: int) -> list:
     return best
 
 
+def _er_bundle(model: str, n: int, density: float, *, f_in: int = 64,
+               hidden: int = 16, n_classes: int = 7, seed: int = 0):
+    """Compile ``model`` over a synthetic ER graph at ``density`` (the
+    density sweep axis the datasets cannot provide)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(a, 0.0)
+    a_gcn, a_mean = graph_data.normalize_adjacency(a)
+    h0 = (rng.normal(size=(n, f_in))
+          * (rng.random((n, f_in)) < 0.5)).astype(np.float32)
+    spec = gnn_models.make_model_spec(model, f_in, hidden, n_classes)
+    meta = compiler.GraphMeta("ER", n, int(a.sum()), f_in)
+    tensors = {"A": jnp.asarray(a_gcn), "A_mean": jnp.asarray(a_mean),
+               "H0": jnp.asarray(h0)}
+    cm = compiler.compile_model(spec, meta, n_cc=7, tensors=tensors,
+                                align=16, on_chip_bytes=256 * 1024)
+    for name, w in gnn_models.init_weights(cm, seed=seed).items():
+        tensors[name] = jnp.asarray(w)
+    return cm, tensors
+
+
+def _dense_oracle(compiled, tensors):
+    """Plain jnp.dot walk with the engines' epilogue semantics."""
+    env = dict(tensors)
+    for k in compiled.graph.topo_order():
+        if k.kernel_type == KernelType.AGGREGATE:
+            x = env["A" if k.agg_op == AggOp.SUM else "A_mean"]
+        else:
+            x = env[k.lhs]
+        y = env[k.rhs]
+        out = jnp.dot(x, y, preferred_element_type=jnp.float32).astype(
+            jnp.promote_types(x.dtype, y.dtype))
+        if k.epilogue_add is not None:
+            out = out + env[k.epilogue_add] * k.epilogue_scale
+        if k.activation_enabled:
+            if k.activation == Activation.RELU:
+                out = jax.nn.relu(out)
+            elif k.activation == Activation.PRELU:
+                out = jnp.where(out >= 0, out, 0.25 * out)
+        env[k.out] = out
+    return env[compiled.graph.kernels[-1].out]
+
+
+def run_formats(*, smoke: bool = False, write_json: bool = True) -> list:
+    """Density sweep for format-aware planning (DESIGN.md section 13).
+
+    GraphSAGE aggregates the RAW feature matrix (f_in columns), so its two
+    Aggregate kernels carry enough arithmetic for the row-CSR-vs-block
+    decision to bite in both directions across the sweep: row-CSR wins at
+    the sparse end and the planner falls back to the block path (fill
+    guard and transform cost) at the dense end.  Both engines run the SAME
+    fused program shape; only the format decision differs.  ``csr_rmax``
+    is deliberately small: the padded row format's conversion AND gather
+    costs scale with rmax, so a tight row budget is what makes the sparse
+    end pay -- the fill guard then vetoes CSR exactly where the budget no
+    longer fits, which is the crossover this sweep measures.
+    """
+    model, f_in, rmax = "sage", 128, 16
+    if smoke:
+        n, densities, repeats = 512, (0.004,), 3
+    else:
+        n, densities, repeats = 1024, (0.001, 0.002, 0.005, 0.01, 0.02), 5
+    mk = dict(model=TPUCostModel(), collect_report=False)
+    fmt_eng = runtime.FusedModelExecutor(format_aware=True, csr_rmax=rmax,
+                                         **mk)
+    blk_eng = runtime.FusedModelExecutor(format_aware=False, **mk)
+    probe = runtime.FusedModelExecutor(format_aware=True, csr_rmax=rmax,
+                                       keep_codes=True, **mk)
+    rows = []
+    for density in densities:
+        cm, tensors = _er_bundle(model, n, density, f_in=f_in, seed=0)
+        last = cm.graph.kernels[-1].out
+        fmt_s, blk_s = _time_paired(
+            [lambda: fmt_eng.run(cm, tensors)[0][last],
+             lambda: blk_eng.run(cm, tensors)[0][last]], repeats)
+        env, _ = probe.run(cm, tensors)
+        oracle = np.asarray(_dense_oracle(cm, tensors))
+        parity = bool(np.allclose(np.asarray(env[last]), oracle,
+                                  atol=3e-4, rtol=3e-4))
+        fmts = {name: int(np.asarray(f))
+                for name, f in probe.planned_formats.items()}
+        speedup = blk_s / fmt_s if fmt_s > 0 else float("inf")
+        rows.append({
+            "model": model, "n": n, "f_in": f_in, "csr_rmax": rmax,
+            "density": density,
+            "formats": fmts,
+            "csr_kernels": sum(f == int(Format.CSR) for f in fmts.values()),
+            "format_aware_s": fmt_s, "block_only_s": blk_s,
+            "speedup": speedup, "parity_ok": parity,
+        })
+        emit(f"engine.formats.{model}.d{density}", fmt_s * 1e6,
+             f"block={blk_s*1e6:.0f}us speedup={speedup:.2f}x "
+             f"csr_kernels={rows[-1]['csr_kernels']} parity={parity}")
+    wins = [r["density"] for r in rows if r["speedup"] > 1.0
+            and r["csr_kernels"] > 0]
+    crossover = max(wins) if wins else None
+    if write_json:
+        _merge_json({
+            "format_rows": rows,
+            "format_crossover_density": crossover,
+        })
+    emit("engine.formats.crossover", 0.0,
+         f"row-CSR wins up to density {crossover}")
+    return rows
+
+
 def run(fast: bool = True, *, smoke: bool = False,
         write_json: bool = True) -> list:
     if smoke:
@@ -173,15 +289,14 @@ def run(fast: bool = True, *, smoke: bool = False,
     gm = geomean(r["speedup"] for r in rows)
     gm_fused = geomean(r["fused_vs_per_kernel_speedup"] for r in rows)
     if write_json:
-        payload = {
+        _merge_json({
             "bench": "seed host-loop vs per-kernel executor vs fused model",
             "device": jax.default_backend(),
             "repeats": repeats,
             "rows": rows,
             "geomean_speedup": gm,
             "geomean_fused_vs_per_kernel": gm_fused,
-        }
-        _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+        })
     emit("engine.geomean_speedup", 0.0, f"{gm:.2f}x -> {_OUT.name}")
     emit("engine.geomean_fused_vs_per_kernel", 0.0, f"{gm_fused:.2f}x")
     return rows
@@ -195,12 +310,28 @@ if __name__ == "__main__":
                          "the fused path regresses vs per-kernel")
     ap.add_argument("--full", action="store_true",
                     help="all four models x both datasets")
+    ap.add_argument("--formats", action="store_true",
+                    help="run ONLY the format-aware density sweep "
+                         "(row-CSR vs block path); with --smoke it gates "
+                         "on parity AND row-CSR winning at the sparsest "
+                         "point")
     ap.add_argument("--tol", type=float, default=1.15,
                     help="smoke gate: fail if fused > tol * per-kernel. "
                          "The default suits a quiet machine; CI's shared "
                          "runners pass a looser value that still catches "
                          "the do-more-work class of regression")
     args = ap.parse_args()
+    if args.formats:
+        fmt_rows = run_formats(smoke=args.smoke, write_json=not args.smoke)
+        if args.smoke:
+            bad = [r for r in fmt_rows if not r["parity_ok"]]
+            if bad:
+                sys.exit(f"format-aware path breaks parity: {bad}")
+            sparsest = min(fmt_rows, key=lambda r: r["density"])
+            if sparsest["csr_kernels"] == 0 or sparsest["speedup"] <= 1.0:
+                sys.exit("row-CSR does not win at the sparsest point: "
+                         f"{sparsest}")
+        sys.exit(0)
     bench_rows = run(fast=not args.full, smoke=args.smoke,
                      write_json=not args.smoke)
     if args.smoke:

@@ -117,6 +117,56 @@ def plan_codes_from_profiles(
     return codes, dens_x, dens_y
 
 
+def plan_format(
+    strategy: str,
+    dens_x: jnp.ndarray,          # (I, K) block densities of X
+    dens_y: jnp.ndarray,          # (K, J) block densities of Y
+    lhs_shape: Tuple[int, int],   # unpadded (m, k) of X
+    rhs_cols: int,                # d: output columns
+    block_dims: Tuple[int, int, int],
+    model: CostModel,
+    *,
+    kernel_type: Optional[KernelType] = None,
+    rmax: int = 0,
+) -> Optional[jnp.ndarray]:
+    """The format half of the (primitive, format) K2P decision.
+
+    Returns ``None`` when the kernel is STATICALLY dense -- static strategies
+    (their contract is a fixed mapping), non-Aggregate kernels (the sparse
+    row format only models a graph-structured lhs), ``rmax <= 0``, or a cost
+    model without format costs (``FPGACostModel``: the paper's FPGA has
+    element-granular primitives, so block-vs-row is moot) -- in which case
+    the caller keeps the block path with ZERO added trace.  Otherwise a
+    traced () int32 ``Format`` code from the same density grids the
+    primitive plan used, so identical profiles give identical decisions in
+    the per-kernel and fused engines (the bitwise-parity invariant).
+
+    The model sees Fig. 13's full accounting: the lhs nonzero count
+    (reconstructed exactly from the ragged-aware block densities), the
+    number of reduction steps the block path cannot SKIP, and the
+    transformation cost of converting the lhs on the fly.
+    """
+    if rmax <= 0 or strategy != "dynamic":
+        return None
+    if kernel_type != KernelType.AGGREGATE:
+        return None
+    if not hasattr(model, "select_format_traced"):
+        return None
+    m, k = lhs_shape
+    bm, bk, _ = block_dims
+    I, K = dens_x.shape
+    # exact unpadded element count per block (ragged edges included)
+    rows = np.clip(m - bm * np.arange(I), 0, bm)
+    cols = np.clip(k - bk * np.arange(K), 0, bk)
+    elems = np.outer(rows, cols).astype(np.float32)
+    nnz = jnp.sum(jnp.asarray(dens_x) * elems)
+    ax = jnp.asarray(dens_x)[:, None, :]                    # (I, 1, K)
+    ay = jnp.swapaxes(jnp.asarray(dens_y), 0, 1)[None]      # (1, J, K)
+    occupied = jnp.sum((ax > 0) & (ay > 0))
+    return model.select_format_traced(m, k, rhs_cols, block_dims, nnz,
+                                      occupied, rmax)
+
+
 def task_costs(
     codes: jnp.ndarray,           # (I, J, K) int32 Primitive codes
     dens_x: jnp.ndarray,          # (I, K)

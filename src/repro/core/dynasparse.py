@@ -39,9 +39,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import analyzer, profiler
+from repro.core import analyzer, formats, profiler
 from repro.core.ir import KernelType
-from repro.core.perf_model import FPGACostModel, Primitive, TPUCostModel
+from repro.core.perf_model import FPGACostModel, Format, Primitive, TPUCostModel
 from repro.kernels import ops
 
 
@@ -58,14 +58,36 @@ class DynasparseResult:
     # (``profiler.BlockProfile``); integer sums pool bitwise-exactly across
     # mismatched block schemes where mean-pooled densities would not.
     out_counts: jnp.ndarray
+    # () int32 perf_model.Format actually EXECUTED (CSR only when the planner
+    # chose it AND the lossless rmax fit held at runtime); 0 whenever the
+    # kernel is statically dense.
+    fmt: jnp.ndarray
 
 
 jax.tree_util.register_pytree_node(
     DynasparseResult,
     lambda r: ((r.out, r.codes, r.dens_x, r.dens_y, r.out_density,
-                r.out_counts), None),
+                r.out_counts, r.fmt), None),
     lambda _, leaves: DynasparseResult(*leaves),
 )
+
+
+def ell_when(want: jnp.ndarray, x: jnp.ndarray, rmax: int) -> formats.ELLMatrix:
+    """Convert ``x`` to its ELL view iff ``want`` selects CSR (traced).
+
+    The zero branch keeps the cond cheap: a DENSE decision pays no
+    conversion work at runtime, only the (static-shape) zero fill.
+    """
+    def _conv():
+        return formats.dense_to_ell(x, rmax=rmax)
+
+    def _zero():
+        return formats.ELLMatrix(
+            jnp.zeros((x.shape[0], rmax), x.dtype),
+            jnp.zeros((x.shape[0], rmax), jnp.int32),
+            jnp.zeros((x.shape[0],), jnp.int32), x.shape)
+
+    return jax.lax.cond(want == Format.CSR, _conv, _zero)
 
 
 def _block_tensor(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
@@ -91,7 +113,8 @@ def _blocked_density(xb: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
     jax.jit,
     static_argnames=("strategy", "kernel_type", "epilogue_scale",
                      "activation", "out_block", "block", "cost_model",
-                     "use_kernels", "tile", "unroll"))
+                     "use_kernels", "tile", "unroll", "format_aware",
+                     "csr_rmax"))
 def dynasparse_matmul(
     x: jnp.ndarray,
     y: jnp.ndarray,
@@ -99,6 +122,8 @@ def dynasparse_matmul(
     codes: Optional[jnp.ndarray] = None,
     dens_x: Optional[jnp.ndarray] = None,
     dens_y: Optional[jnp.ndarray] = None,
+    fmt: Optional[jnp.ndarray] = None,
+    ell: Optional[formats.ELLMatrix] = None,
     residual: Optional[jnp.ndarray] = None,
     strategy: str = "dynamic",
     kernel_type: Optional[KernelType] = None,
@@ -110,6 +135,8 @@ def dynasparse_matmul(
     use_kernels: bool = False,
     tile: Tuple[int, int] = (128, 128),
     unroll: int = 1,
+    format_aware: bool = False,
+    csr_rmax: int = 64,
 ) -> DynasparseResult:
     """``x @ y`` with per-(partition pair) primitive dispatch + fused epilogue.
 
@@ -147,6 +174,21 @@ def dynasparse_matmul(
     dot path.  Value semantics are identical either way (the dispatch
     NEVER changes the result, only the cost -- see
     ``dynasparse_dense_equivalent``).
+
+    Format-aware execution (DESIGN.md section 13): with
+    ``format_aware=True`` the planner additionally scores the row-CSR
+    format via ``analyzer.plan_format`` (or accepts a precomputed ``fmt``
+    code, the format analogue of the ``codes`` bypass, plus an optional
+    pre-converted ``ell`` view so the fused walk can share one D2S across
+    kernels).  When CSR wins AND every row fits ``csr_rmax`` (checked at
+    runtime -- the decision is a prediction, the fit is a fact), the whole
+    task loop is replaced by one row-gather SPMM over the on-the-fly
+    converted lhs under a ``lax.cond``; the epilogue and writeback profiling
+    are shared, so side outputs keep their meaning.  The primitive ``codes``
+    are still planned and returned either way (they are the side-output
+    contract and the fallback path).  ``format_aware=False``, a static
+    strategy, a non-Aggregate kernel, or a cost model without format costs
+    all leave the trace byte-identical to the block-only executor.
     """
     m, n = x.shape[0], y.shape[1]
     bm, bk, bn = block
@@ -162,6 +204,10 @@ def dynasparse_matmul(
     if codes is None:
         codes = analyzer.plan_codes(strategy, dens_x, dens_y, cost_model,
                                     kernel_type=kernel_type)
+    if format_aware and fmt is None:
+        fmt = analyzer.plan_format(strategy, dens_x, dens_y, x.shape, n,
+                                   block, cost_model,
+                                   kernel_type=kernel_type, rmax=csr_rmax)
 
     out_dtype = jnp.promote_types(x.dtype, y.dtype)
     if residual is not None:
@@ -206,9 +252,34 @@ def dynasparse_matmul(
             0, K, red, jnp.zeros((bm, bn), jnp.float32), unroll=unroll)
         return None, acc.astype(out_dtype)
 
-    _, blocks = jax.lax.scan(task, None, jnp.arange(I * J))
-    out = blocks.reshape(I, J, bm, bn).transpose(0, 2, 1, 3)
-    out = out.reshape(I * bm, J * bn)[:m, :n]
+    def _block_path():
+        _, blocks = jax.lax.scan(task, None, jnp.arange(I * J))
+        o = blocks.reshape(I, J, bm, bn).transpose(0, 2, 1, 3)
+        return o.reshape(I * bm, J * bn)[:m, :n]
+
+    if format_aware and fmt is not None:
+        # On-the-fly D2S + row-gather SPMM, under a cond so a DENSE decision
+        # runs the block path untouched.  The runtime ``fits`` check makes
+        # the conversion lossless-or-ignored: if any row overflows csr_rmax
+        # (the planner's fill-slack guess was wrong), fall back to blocks.
+        if ell is None:
+            ell = ell_when(fmt, x, csr_rmax)
+        fits = jnp.max(ell.row_counts) <= csr_rmax
+        use_csr = jnp.logical_and(fmt == Format.CSR, fits)
+
+        def _csr_path():
+            if use_kernels:
+                o = ops.csr_spmm(ell, y, bn=tile[1])
+            else:
+                o = formats.ell_matmul(ell, y)
+            return o.astype(out_dtype)
+
+        out = jax.lax.cond(use_csr, _csr_path,
+                           lambda: _block_path().astype(out_dtype))
+        executed_fmt = use_csr.astype(jnp.int32)
+    else:
+        out = _block_path()
+        executed_fmt = jnp.zeros((), jnp.int32)
 
     # --- fused epilogue (the FPGA applies these on the writeback path) ---
     if residual is not None:
@@ -226,7 +297,7 @@ def dynasparse_matmul(
     out_counts = profiler.block_counts(out, ob)
     out_density = profiler.density_from_counts(out_counts, m, n, *ob)
     return DynasparseResult(out.astype(out_dtype), codes, dens_x, dens_y,
-                            out_density, out_counts)
+                            out_density, out_counts, executed_fmt)
 
 
 def dynasparse_dense_equivalent(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

@@ -10,6 +10,18 @@ Block-level formats: the TPU adaptation skips zero *tiles*, so we also keep a
 BlockCOO/BlockCSR view: per-(row-panel) sorted nonzero tile-column indices
 plus the dense tile payload, which is what the spdmm/spmm Pallas kernels
 consume via scalar prefetch.
+
+Row-level formats (DESIGN.md section 13): :class:`CSRMatrix` is the flat
+padded ``indptr``/``indices``/``values`` storage format and
+:class:`ELLMatrix` its fixed-slots-per-row execution view, which is what the
+row-gather SPMM paths (``kernels.csr_spmm`` and :func:`ell_matmul`) consume
+-- Pallas grids and XLA gathers both need a static per-row slot capacity.
+:func:`dense_to_csr` is the reference converter (one global prefix sum, the
+paper's D2S verbatim); :func:`dense_to_ell` is the in-program converter the
+format-aware executor traces -- a hierarchical compaction (per-subtile
+counts, a short log-depth prefix over subtiles, then rank selection inside
+one gathered subtile per slot) that avoids full-length scans, which the CPU
+backend lowers catastrophically.
 """
 from __future__ import annotations
 
@@ -237,3 +249,219 @@ def bcsr_to_dense(b: BlockCSRMatrix) -> jnp.ndarray:
     vals = jnp.where(valid[..., None, None], b.blocks, 0)
     tiles = tiles.at[row_ids, cols].add(vals)[:, :kb]
     return untile_view(tiles, b.shape)
+
+
+# --------------------------------------------------------------------------
+# Row-level CSR (padded indptr/indices/values, static capacity).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CSRMatrix:
+    """Padded flat CSR with STATIC capacity.
+
+    ``indptr`` is monotone with ``indptr[-1] == nnz`` (clamped to capacity);
+    entries ``[indptr[r], indptr[r+1])`` of ``indices``/``values`` are row
+    r's column ids (ascending) and values.  Slots ``>= nnz`` are (0, 0.0)
+    padding, exactly like :class:`COOMatrix`.
+    """
+
+    indptr: jnp.ndarray    # (m + 1,) int32
+    indices: jnp.ndarray   # (capacity,) int32
+    values: jnp.ndarray    # (capacity,)
+    shape: Tuple[int, int]
+
+    @property
+    def capacity(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def nnz(self) -> jnp.ndarray:
+        return self.indptr[-1]
+
+    def density(self) -> jnp.ndarray:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+
+jax.tree_util.register_pytree_node(
+    CSRMatrix,
+    lambda m: ((m.indptr, m.indices, m.values), m.shape),
+    lambda shape, leaves: CSRMatrix(*leaves, shape=shape),
+)
+
+
+def dense_to_csr(x: jnp.ndarray, capacity: Optional[int] = None) -> CSRMatrix:
+    """D2S into flat CSR: one global prefix-sum compaction (reference path).
+
+    Same compaction network as :func:`dense_to_coo`, but the row ids are
+    folded into ``indptr`` (cumulative per-row counts, clamped to capacity --
+    the clamp is consistent with which entries drop into the pad, because
+    row-major compaction drops exactly the trailing ones).
+    """
+    m, n = x.shape
+    capacity = int(capacity if capacity is not None else m * n)
+    flat = x.reshape(-1)
+    mask = flat != 0
+    dest = jnp.where(mask, jnp.cumsum(mask) - 1, capacity)
+    dest = jnp.minimum(dest, capacity)
+    cols_src = (jnp.arange(m * n, dtype=jnp.int32) % n).astype(jnp.int32)
+    cols = jnp.zeros((capacity + 1,), jnp.int32).at[dest].set(cols_src)
+    vals = jnp.zeros((capacity + 1,), x.dtype).at[dest].set(flat)
+    row_counts = jnp.sum(x != 0, axis=1)
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.minimum(jnp.cumsum(row_counts), capacity).astype(jnp.int32)])
+    return CSRMatrix(indptr, cols[:capacity], vals[:capacity], (m, n))
+
+
+def _csr_rows(c: CSRMatrix) -> jnp.ndarray:
+    """Row id of each storage slot (searchsorted over the row boundaries)."""
+    e = jnp.arange(c.capacity)
+    return jnp.searchsorted(c.indptr[1:], e, side="right").astype(jnp.int32)
+
+
+def csr_to_dense(c: CSRMatrix) -> jnp.ndarray:
+    m, n = c.shape
+    valid = jnp.arange(c.capacity) < c.nnz
+    rows = jnp.where(valid, jnp.minimum(_csr_rows(c), m - 1), 0)
+    cols = jnp.where(valid, c.indices, 0)
+    vals = jnp.where(valid, c.values, 0)
+    return jnp.zeros((m, n), c.values.dtype).at[rows, cols].add(vals)
+
+
+def coo_to_csr(coo: COOMatrix) -> CSRMatrix:
+    """Fold row-major COO row ids into ``indptr`` (no re-sort needed)."""
+    m, _ = coo.shape
+    valid = jnp.arange(coo.capacity) < coo.nnz
+    bound = jnp.arange(m + 1)
+    indptr = jnp.sum(valid[None, :] & (coo.rows[None, :] < bound[:, None]),
+                     axis=1).astype(jnp.int32)
+    return CSRMatrix(indptr,
+                     jnp.where(valid, coo.cols, 0),
+                     jnp.where(valid, coo.values, 0), coo.shape)
+
+
+def csr_to_coo(c: CSRMatrix) -> COOMatrix:
+    m, _ = c.shape
+    valid = jnp.arange(c.capacity) < c.nnz
+    rows = jnp.where(valid, jnp.minimum(_csr_rows(c), m - 1), 0)
+    return COOMatrix(rows.astype(jnp.int32),
+                     jnp.where(valid, c.indices, 0),
+                     jnp.where(valid, c.values, 0),
+                     c.nnz.astype(jnp.int32), c.shape)
+
+
+# --------------------------------------------------------------------------
+# ELL: the fixed-slots-per-row execution view of row-CSR.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ELLMatrix:
+    """Padded row-CSR execution view: ``rmax`` slots per row.
+
+    ``values[i, s]`` / ``cols[i, s]`` are row i's s-th nonzero (slots beyond
+    the row's count hold value 0 and a clamped in-range column, so gathers
+    through them are safe and contribute nothing).  ``row_counts`` keeps the
+    TRUE (uncapped) per-row nonzero counts, so ``max(row_counts) <= rmax``
+    is an exact lossless-fit predicate.
+    """
+
+    values: jnp.ndarray      # (m, rmax)
+    cols: jnp.ndarray        # (m, rmax) int32
+    row_counts: jnp.ndarray  # (m,) int32 -- TRUE counts, may exceed rmax
+    shape: Tuple[int, int]
+
+    @property
+    def rmax(self) -> int:
+        return self.values.shape[1]
+
+
+jax.tree_util.register_pytree_node(
+    ELLMatrix,
+    lambda m: ((m.values, m.cols, m.row_counts), m.shape),
+    lambda shape, leaves: ELLMatrix(*leaves, shape=shape),
+)
+
+
+def _hillis(a: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum over the last axis (log-depth shift network --
+    the paper's D2S compaction network verbatim, and much faster than the
+    CPU backend's ``cumsum`` lowering on short axes)."""
+    n = a.shape[-1]
+    d = 1
+    while d < n:
+        a = a + jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(d, 0)])[..., :-d]
+        d *= 2
+    return a
+
+
+def dense_to_ell(x: jnp.ndarray, rmax: int, sub: int = 16) -> ELLMatrix:
+    """Hierarchical D2S into ELL: the in-program converter.
+
+    Per row: count nonzeros per ``sub``-wide subtile, prefix-sum over the
+    (short) subtile axis, then for each of the ``rmax`` slots locate the
+    subtile holding that rank and resolve the exact column with one more
+    prefix inside a single gathered subtile.  Everything is O(m * rmax * sub)
+    gather/compare work with only log-depth prefixes -- no full-width scan.
+    """
+    m, k = x.shape
+    pad = (-k) % sub
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    k2 = xp.shape[1]
+    S = k2 // sub
+    msub = (xp != 0).reshape(m, S, sub)
+    sub_cnt = jnp.sum(msub, axis=2, dtype=jnp.int32)             # (m, S)
+    sub_inc = _hillis(sub_cnt)                                   # inclusive
+    counts = sub_inc[:, -1]
+    sub_exc = sub_inc - sub_cnt                                  # exclusive
+    targets = jnp.arange(1, rmax + 1, dtype=jnp.int32)
+    # subtile that holds the t-th nonzero of each row
+    j = jnp.sum(sub_inc[:, None, :] < targets[None, :, None],
+                axis=2, dtype=jnp.int32)                         # (m, rmax)
+    j = jnp.minimum(j, S - 1)
+    base = jnp.take_along_axis(sub_exc, j, axis=1)
+    rank = targets[None, :] - base                               # 1-indexed
+    flat = jnp.arange(m, dtype=jnp.int32)[:, None] * S + j
+    g = jnp.take(msub.reshape(m * S, sub).astype(jnp.int32), flat, axis=0)
+    gp = _hillis(g)                                              # (m, rmax, sub)
+    off = jnp.sum(gp < rank[:, :, None], axis=2, dtype=jnp.int32)
+    cols = jnp.minimum(j * sub + off, k - 1)
+    vals = jnp.take_along_axis(xp, cols, axis=1)
+    valid = jnp.arange(rmax, dtype=jnp.int32)[None, :] < counts[:, None]
+    return ELLMatrix(jnp.where(valid, vals, 0), cols.astype(jnp.int32),
+                     counts, (m, k))
+
+
+def csr_to_ell(c: CSRMatrix, rmax: int) -> ELLMatrix:
+    """Flat CSR -> ELL: scatter each slot to (row, slot - indptr[row])."""
+    m, _ = c.shape
+    e = jnp.arange(c.capacity)
+    rows = _csr_rows(c)
+    pos = e - c.indptr[jnp.minimum(rows, m - 1)]
+    valid = (e < c.nnz) & (pos < rmax)
+    r = jnp.where(valid, jnp.minimum(rows, m - 1), 0)
+    p = jnp.where(valid, pos, rmax)
+    cols = jnp.zeros((m, rmax + 1), jnp.int32).at[r, p].set(c.indices)[:, :rmax]
+    vals = jnp.zeros((m, rmax + 1), c.values.dtype).at[r, p].set(c.values)[:, :rmax]
+    row_counts = (c.indptr[1:] - c.indptr[:-1]).astype(jnp.int32)
+    return ELLMatrix(vals, cols, row_counts, c.shape)
+
+
+def ell_to_dense(ell: ELLMatrix) -> jnp.ndarray:
+    """S2D (lossless only when every row fits: max(row_counts) <= rmax)."""
+    m, k = ell.shape
+    rmax = ell.rmax
+    valid = (jnp.arange(rmax)[None, :]
+             < jnp.minimum(ell.row_counts, rmax)[:, None])
+    rows = jnp.broadcast_to(jnp.arange(m)[:, None], (m, rmax))
+    return (jnp.zeros((m, k), ell.values.dtype)
+            .at[rows, ell.cols].add(jnp.where(valid, ell.values, 0)))
+
+
+def ell_matmul(ell: ELLMatrix, y: jnp.ndarray) -> jnp.ndarray:
+    """Row-gather SPMM (XLA path): out[i] = sum_s vals[i,s] * y[cols[i,s]].
+
+    Invalid slots carry value 0 and an in-range column, so no masking is
+    needed.  Accumulates in f32 like the block primitives.
+    """
+    g = jnp.take(y, ell.cols, axis=0).astype(jnp.float32)        # (m, rmax, n)
+    return jnp.sum(ell.values.astype(jnp.float32)[:, :, None] * g, axis=1)

@@ -48,6 +48,22 @@ class Primitive(enum.IntEnum):
 N_PRIMITIVES = len(Primitive)
 
 
+class Format(enum.IntEnum):
+    """Execution formats for a kernel's sparse operand (DESIGN.md section 13).
+
+    The primitive code picks HOW a reduction step computes; the format code
+    picks WHAT representation the whole kernel runs in.  DENSE keeps the
+    block-tensor path (GEMM/SpDMM/SPMM per task); CSR converts the sparse
+    lhs on the fly (D2S) and runs the row-gather SPMM instead.
+    """
+
+    DENSE = 0
+    CSR = 1
+
+
+N_FORMATS = len(Format)
+
+
 @dataclasses.dataclass(frozen=True)
 class FPGACostModel:
     """Paper Table IV.  Costs are in accelerator clock cycles.
@@ -138,6 +154,14 @@ class TPUCostModel:
     eff_spdmm: float = 0.88              # gather/prefetch bubbles
     eff_spmm: float = 0.72               # intersection bookkeeping
     launch_overhead_s: float = 2e-6      # fixed per-primitive-call overhead
+    # -- row-CSR format costs (Fig. 13 runtime-overhead accounting) ----------
+    eff_csr: float = 0.45                # row-gather VPU MACs, random-row DMA
+    eff_transform: float = 1e-3          # D2S bandwidth derate: the conversion
+    #                                      is prefix/gather passes, not
+    #                                      streaming copies
+    transform_overhead_s: float = 2e-5   # fixed cost of the multi-pass D2S
+    csr_fill_slack: float = 3.0          # predicted max row nnz ~= slack *
+    #                                      mean (degree-skew headroom)
 
     def _roofline_seconds(self, flops, bytes_moved, eff) -> ArrayLike:
         t_compute = flops / (self.spec.peak_bf16_flops * eff)
@@ -199,6 +223,50 @@ class TPUCostModel:
         )
         best = jnp.argmin(costs, axis=0).astype(jnp.int32) + 1  # offset: GEMM=1
         return jnp.where(jnp.minimum(b_x, b_y) == 0.0, Primitive.SKIP, best)
+
+    # -- format selection (row-CSR vs the block path) ------------------------
+
+    def csr_spmm_seconds(self, m, n, d, rmax) -> ArrayLike:
+        """Row-gather SPMM over the padded ELL view: every row issues
+        ``rmax`` slot MACs across ``d`` output lanes; bytes are dominated by
+        the gathered rhs rows (one (d,)-row DMA per slot)."""
+        flops = 2.0 * m * rmax * d
+        bytes_moved = (m * rmax * (4 + self.dtype_bytes)       # cols + vals
+                       + m * rmax * d * self.dtype_bytes       # gathered rows
+                       + m * d * self.dtype_bytes)             # output
+        return self._roofline_seconds(flops, bytes_moved, self.eff_csr)
+
+    def transform_seconds(self, m, n) -> ArrayLike:
+        """Dense -> row-CSR conversion (D2S): reads the dense operand and
+        writes the compacted view, at conversion efficiency (prefix networks
+        and rank-select gathers, far off streaming bandwidth), plus a fixed
+        multi-pass overhead."""
+        bytes_moved = 2.0 * m * n * self.dtype_bytes
+        return (bytes_moved / (self.spec.hbm_bandwidth * self.eff_transform)
+                + self.transform_overhead_s)
+
+    def select_format_traced(self, m, n, d, block_dims, nnz, occupied_steps,
+                             rmax) -> jnp.ndarray:
+        """Fig. 13 accounting, traceable: CSR wins only when conversion PLUS
+        gather execution beat the block path's occupied reduction steps, AND
+        the predicted max row fill fits ``rmax`` (lossless guard).
+
+        ``occupied_steps`` is the number of (i, j, k) tasks whose operand
+        blocks are both nonzero -- the steps the block path cannot SKIP; each
+        is charged one block-GEMM (an upper bound that SpDMM/SPMM tighten,
+        but launch overhead dominates at these block sizes).  The transform
+        cost is charged in full to EVERY kernel even when the fused walk will
+        reuse one conversion -- both engines must reach identical decisions
+        from identical densities (the bitwise-parity invariant), and the
+        per-kernel engine really does convert per kernel.
+        """
+        bm, bk, bn_ = block_dims
+        block_s = occupied_steps * self.gemm_seconds(bm, bk, bn_)
+        csr_s = self.transform_seconds(m, n) + self.csr_spmm_seconds(
+            m, n, d, rmax)
+        fits = nnz * self.csr_fill_slack <= rmax * m
+        return jnp.where((csr_s < block_s) & fits,
+                         Format.CSR, Format.DENSE).astype(jnp.int32)
 
 
 def predict_output_density(a_x: ArrayLike, a_y: ArrayLike, n: ArrayLike) -> ArrayLike:

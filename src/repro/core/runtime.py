@@ -42,11 +42,13 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import analyzer, profiler, scheduler
+from repro.core import formats as _formats
 from repro.distributed import sharding as dist_sharding
 from repro.core.compiler import CompiledModel
-from repro.core.dynasparse import DynasparseResult, dynasparse_matmul
+from repro.core.dynasparse import (DynasparseResult, dynasparse_matmul,
+                                   ell_when)
 from repro.core.ir import Activation, AggOp, KernelIR, KernelType
-from repro.core.perf_model import FPGACostModel
+from repro.core.perf_model import FPGACostModel, Format
 from repro.core.profiler import SparsityStats
 
 # instructions the soft processor spends per K2P decision (Alg. 7 is a few
@@ -360,7 +362,9 @@ class DynasparseEngine:
                  use_kernels: bool = False,
                  tile: Tuple[int, int] = (16, 16),
                  unroll: int = 1,
-                 keep_codes: bool = False):
+                 keep_codes: bool = False,
+                 format_aware: bool = True,
+                 csr_rmax: int = 64):
         self.strategy = strategy
         self.model = model or FPGACostModel()
         self.n_cc = n_cc
@@ -370,6 +374,13 @@ class DynasparseEngine:
         # debug/report switch: record every kernel's planner code grid in
         # ``planned_codes`` (the fused-vs-per-kernel parity tests diff them).
         self.keep_codes = keep_codes
+        # format-aware K2P (DESIGN.md section 13).  True is safe with the
+        # default FPGACostModel: it has no format costs, so plan_format
+        # statically keeps the block path and the trace is unchanged.  The
+        # row-CSR path activates only under a model with
+        # ``select_format_traced`` (TPUCostModel).
+        self.format_aware = format_aware
+        self.csr_rmax = csr_rmax
         # executable cache: signature -> partial-applied jitted executor.
         # jax.jit has its own global trace cache; this local cache makes the
         # hit/miss behavior observable (tests, benchmarks) and keeps key
@@ -379,6 +390,7 @@ class DynasparseEngine:
         self.cache_misses = 0
         self.profiled_densities: Dict[str, jnp.ndarray] = {}
         self.planned_codes: Dict[str, np.ndarray] = {}
+        self.planned_formats: Dict[str, int] = {}
 
     def run(self, compiled: CompiledModel, tensors: Dict[str, jnp.ndarray]
             ) -> Tuple[Dict[str, jnp.ndarray], InferenceReport]:
@@ -386,6 +398,7 @@ class DynasparseEngine:
         n_cc = self.n_cc or compiled.partition.n_cc
         self.profiled_densities = {}
         self.planned_codes = {}
+        self.planned_formats = {}
         reports: List[KernelReport] = []
         for k in compiled.graph.topo_order():
             t0 = time.perf_counter()
@@ -423,7 +436,9 @@ class DynasparseEngine:
             cost_model=self.model,
             use_kernels=self.use_kernels,
             tile=self.tile,
-            unroll=self.unroll)
+            unroll=self.unroll,
+            format_aware=self.format_aware,
+            csr_rmax=self.csr_rmax)
         self._executors[key] = fn
         return fn
 
@@ -443,6 +458,7 @@ class DynasparseEngine:
         self.profiled_densities[k.out] = res.out_density
         if self.keep_codes:
             self.planned_codes[k.out] = np.asarray(res.codes)
+            self.planned_formats[k.out] = int(res.fmt)
 
         # --- host bookkeeping from the planner's codes (side outputs) ---
         rep = _bookkeep_kernel(k, res.codes, res.dens_x, res.dens_y,
@@ -513,7 +529,9 @@ class FusedModelExecutor:
                  keep_intermediates: bool = False,
                  donate: bool = False,
                  keep_codes: bool = False,
-                 collect_report: bool = True):
+                 collect_report: bool = True,
+                 format_aware: bool = True,
+                 csr_rmax: int = 64):
         self.strategy = strategy
         self.model = model or FPGACostModel()
         self.n_cc = n_cc
@@ -523,6 +541,12 @@ class FusedModelExecutor:
         self.keep_intermediates = keep_intermediates
         self.donate = donate
         self.keep_codes = keep_codes
+        # format-aware K2P, same contract as DynasparseEngine's: inert under
+        # the default FPGACostModel, active under TPUCostModel.  The fused
+        # walk additionally SHARES one on-the-fly conversion between kernels
+        # reading the same source tensor (see _trace_kernels).
+        self.format_aware = format_aware
+        self.csr_rmax = csr_rmax
         # serving knob: False skips ALL per-kernel host bookkeeping --
         # no device->host transfer of the (I, J, K) code grids (tens of MB
         # per kernel at NELL scale), no O(I*J*K) cost prediction, no Alg. 8
@@ -544,6 +568,7 @@ class FusedModelExecutor:
         self.trace_count = 0
         self.profiled_densities: Dict[str, jnp.ndarray] = {}
         self.planned_codes: Dict[str, np.ndarray] = {}
+        self.planned_formats: Dict[str, np.ndarray] = {}
 
     # -- program construction ----------------------------------------------
     @staticmethod
@@ -593,8 +618,20 @@ class FusedModelExecutor:
         programs): walk the topo-ordered kernels, planning each from
         ``profiles`` (graph inputs) or the producer's chained writeback
         counts.  Mutates ``env`` with every kernel's output and returns the
-        per-kernel (codes, dens_x, dens_y, out_density) side outputs."""
+        per-kernel (codes, dens_x, dens_y, out_density, fmt) side outputs.
+
+        Format sharing: when two kernels read the same source tensor (both
+        aggregates of a 2-layer GCN read "A"), the fused walk converts it
+        at most ONCE -- the first kernel that wants CSR pays the D2S, later
+        kernels reuse the view (a second cond converts only if no earlier
+        kernel did).  The conversion is deterministic, so the reused view is
+        bitwise what the per-kernel engine rebuilds for itself, and each
+        kernel's DECISION still charges the full transform cost (see
+        ``TPUCostModel.select_format_traced``) so decisions stay a pure
+        function of the densities in both engines."""
         counts_env: Dict[str, profiler.BlockProfile] = {}
+        # (source name, shape) -> (want so far, shared ELL view)
+        ell_env: Dict[tuple, tuple] = {}
         sides = []
         for k, (fx, fy) in zip(kernels, flows):
             x, y = env[fx.source], env[fy.source]
@@ -605,11 +642,35 @@ class FusedModelExecutor:
             codes, dens_x, dens_y = analyzer.plan_codes_from_profiles(
                 self.strategy, prof_x, prof_y, self.model,
                 kernel_type=k.kernel_type)
+            fmt = None
+            ell = None
+            if self.format_aware:
+                fmt = analyzer.plan_format(
+                    self.strategy, dens_x, dens_y, x.shape, y.shape[1],
+                    k.block_dims, self.model, kernel_type=k.kernel_type,
+                    rmax=self.csr_rmax)
+                if fmt is not None:
+                    ekey = (fx.source, tuple(x.shape))
+                    prev = ell_env.get(ekey)
+                    if prev is None:
+                        ell = ell_when(fmt, x, self.csr_rmax)
+                        want = fmt
+                    else:
+                        prev_want, prev_ell = prev
+                        ell = jax.lax.cond(
+                            jnp.logical_and(fmt == Format.CSR,
+                                            prev_want != Format.CSR),
+                            lambda x=x: _formats.dense_to_ell(
+                                x, rmax=self.csr_rmax),
+                            lambda: prev_ell)
+                        want = jnp.maximum(prev_want, fmt)
+                    ell_env[ekey] = (want, ell)
             residual = (env[k.epilogue_add]
                         if k.epilogue_add is not None else None)
             n2 = k.scheme.n2
             res = dynasparse_matmul(
                 x, y, codes=codes, dens_x=dens_x, dens_y=dens_y,
+                fmt=fmt, ell=ell,
                 residual=residual, strategy=self.strategy,
                 kernel_type=k.kernel_type,
                 epilogue_scale=(k.epilogue_scale
@@ -618,12 +679,13 @@ class FusedModelExecutor:
                             if k.activation_enabled else "none"),
                 out_block=(n2, n2), block=k.block_dims,
                 cost_model=self.model, use_kernels=self.use_kernels,
-                tile=self.tile, unroll=self.unroll)
+                tile=self.tile, unroll=self.unroll,
+                format_aware=self.format_aware, csr_rmax=self.csr_rmax)
             env[k.out] = res.out
             counts_env[k.out] = profiler.BlockProfile(
                 res.out_counts, res.out.shape, (n2, n2))
             sides.append((res.codes, res.dens_x, res.dens_y,
-                          res.out_density))
+                          res.out_density, res.fmt))
         return sides
 
     def _build(self, compiled: CompiledModel) -> tuple:
@@ -763,11 +825,14 @@ class FusedModelExecutor:
             self.planned_codes = {
                 k.out: np.asarray(side[0])
                 for k, side in zip(compiled.graph.topo_order(), sides)}
+            self.planned_formats = {
+                k.out: np.asarray(side[4])
+                for k, side in zip(compiled.graph.topo_order(), sides)}
         reports = []
         if self.collect_report:
             reports = [
                 _bookkeep_kernel(k, codes, dens_x, dens_y, n_cc, self.model)
-                for k, (codes, dens_x, dens_y, _) in
+                for k, (codes, dens_x, dens_y, _, _fmt) in
                 zip(compiled.graph.topo_order(), sides)]
         return outs, InferenceReport(reports, self.strategy,
                                      fused_wall_seconds=wall)
@@ -859,10 +924,13 @@ class FusedModelExecutor:
         if self.keep_codes:
             self.planned_codes = {
                 k.out: np.asarray(side[0]) for k, side in zip(topo, sides)}
+            self.planned_formats = {
+                k.out: np.asarray(side[4])  # (B,) executed Format per slot
+                for k, side in zip(topo, sides)}
         reports = []
         if self.collect_report:
             for b in range(pending.wave_slots):
-                for k, (codes, dens_x, dens_y, _) in zip(topo, sides):
+                for k, (codes, dens_x, dens_y, _, _fmt) in zip(topo, sides):
                     rep = _bookkeep_kernel(k, codes[b], dens_x[b], dens_y[b],
                                            pending.n_cc, self.model)
                     rep.name = f"{k.name}[{b}]"

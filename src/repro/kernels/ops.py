@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import formats
 from repro.core.perf_model import Primitive
+from repro.kernels import csr_spmm as _csr
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gemm as _gemm
 from repro.kernels import profile as _profile
@@ -77,6 +78,25 @@ def spmm(x: jnp.ndarray, y: jnp.ndarray, *,
     plan = _spmm.plan_intersection(xb, yb)
     out = _spmm.spmm(xb, yb, plan, interpret=interpret)
     return out[:m, :n]
+
+
+def csr_spmm(x, y: jnp.ndarray, *, rmax: int = 64, bn: int = 128,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Row-CSR x dense.  ``x`` is a dense matrix (converted here via
+    ``formats.dense_to_ell``, the on-the-fly D2S path) or an already-built
+    ``formats.ELLMatrix`` (the fused executor converts once and reuses)."""
+    interpret = default_interpret() if interpret is None else interpret
+    if isinstance(x, formats.ELLMatrix):
+        ell = x
+    else:
+        ell = formats.dense_to_ell(x, rmax=rmax)
+    n = y.shape[1]
+    bn = min(bn, max(n, 1))
+    yp = _pad2(y, (1, bn))
+    out = _csr.csr_spmm(ell.values, ell.cols,
+                        jnp.minimum(ell.row_counts, ell.rmax), yp,
+                        bn=bn, interpret=interpret)
+    return out[:, :n]
 
 
 def matmul(x: jnp.ndarray, y: jnp.ndarray, primitive: Primitive, *,

@@ -41,6 +41,9 @@ def plan_intersection(x: BlockCSRMatrix, y: BlockCSCMatrix,
 
     O(Mb*Nb*Kb) bit work on the host/runtime side -- the analogue of the
     paper's K2P/schedule preparation, overlappable with prior-layer compute.
+    Surviving-step ``counts`` come from one occupancy matmul and the slot
+    schedules are compacted one X-row at a time under ``lax.map``, so peak
+    memory is O(Nb*Kb) per row -- never a materialized (Mb, Nb, Kb) cube.
     """
     mb, kb = x.grid
     kb2, nb = y.grid
@@ -56,24 +59,32 @@ def plan_intersection(x: BlockCSRMatrix, y: BlockCSCMatrix,
         jnp.arange(nb)[:, None],
         jnp.where(slot_y[None, :] < y.counts[:, None], y.row_idx, kb),
     ].set(True)[:, :kb].T                            # (Kb, Nb)
-    inter = occ_x[:, None, :] & occ_y.T[None, :, :]  # (Mb, Nb, Kb)
-    counts = jnp.sum(inter, axis=2).astype(jnp.int32)
+    # counts[i, j] = |{k : X[i,k] occupied and Y[k,j] occupied}| as a matmul
+    counts = occ_x.astype(jnp.int32) @ occ_y.astype(jnp.int32)  # (Mb, Nb)
     smax = int(smax if smax is not None else kb)
     # positions of k within the compact storages
     xpos_full = jnp.cumsum(occ_x, axis=1) - 1        # (Mb, Kb)
     ypos_full = (jnp.cumsum(occ_y, axis=0) - 1).T    # (Nb, Kb)
-    # compact the surviving k's of each (i, j) into s-slots
-    dest = jnp.where(inter, jnp.cumsum(inter, axis=2) - 1, smax)
-    dest = jnp.minimum(dest, smax)
-    ii = jnp.broadcast_to(jnp.arange(mb)[:, None, None], inter.shape)
-    jj = jnp.broadcast_to(jnp.arange(nb)[None, :, None], inter.shape)
-    xp = jnp.broadcast_to(xpos_full[:, None, :], inter.shape)
-    yp = jnp.broadcast_to(ypos_full[None, :, :], inter.shape)
-    xpos = jnp.zeros((mb, nb, smax + 1), jnp.int32).at[ii, jj, dest].set(
-        xp.astype(jnp.int32))[..., :smax]
-    ypos = jnp.zeros((mb, nb, smax + 1), jnp.int32).at[ii, jj, dest].set(
-        yp.astype(jnp.int32))[..., :smax]
-    return IntersectionPlan(xpos, ypos, jnp.minimum(counts, smax))
+    occ_yt = occ_y.T                                 # (Nb, Kb)
+    jj = jnp.broadcast_to(jnp.arange(nb)[:, None], (nb, kb))
+    yp = ypos_full.astype(jnp.int32)
+
+    def _row(args):
+        # compact the surviving k's of X-row i into s-slots for every j
+        occ_row, xp_row = args                       # (Kb,), (Kb,)
+        inter = occ_row[None, :] & occ_yt            # (Nb, Kb)
+        dest = jnp.where(inter, jnp.cumsum(inter, axis=1) - 1, smax)
+        dest = jnp.minimum(dest, smax)
+        xp = jnp.broadcast_to(xp_row[None, :].astype(jnp.int32), (nb, kb))
+        xpos_r = jnp.zeros((nb, smax + 1), jnp.int32).at[jj, dest].set(
+            xp)[:, :smax]
+        ypos_r = jnp.zeros((nb, smax + 1), jnp.int32).at[jj, dest].set(
+            yp)[:, :smax]
+        return xpos_r, ypos_r
+
+    xpos, ypos = jax.lax.map(_row, (occ_x, xpos_full))
+    return IntersectionPlan(xpos, ypos,
+                            jnp.minimum(counts, smax).astype(jnp.int32))
 
 
 def _spmm_kernel(xpos_ref, ypos_ref, counts_ref, x_ref, y_ref, o_ref,

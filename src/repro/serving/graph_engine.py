@@ -186,7 +186,9 @@ class GraphServeEngine:
                  strategy: str = "dynamic", n_cc: int = 7, align: int = 16,
                  on_chip_bytes: int = 256 * 1024,
                  donate: bool = True, collect_report: bool = False,
-                 keep_codes: bool = False, mesh: Optional[Mesh] = None):
+                 keep_codes: bool = False, mesh: Optional[Mesh] = None,
+                 cost_model=None, format_aware: bool = True,
+                 csr_rmax: int = 64):
         self.spec = gnn_models.make_model_spec(model, f_in, hidden, n_classes)
         self.f_in = f_in
         self.slots = slots
@@ -215,9 +217,18 @@ class GraphServeEngine:
         # executor's input-profile cache is identity-keyed, so steady-state
         # waves never re-profile them on the host.
         self.weights = {name: jnp.asarray(w) for name, w in weights.items()}
+        # cost_model picks the K2P/format model (None -> the paper-faithful
+        # FPGACostModel; pass perf_model.TPUCostModel() to turn on row-CSR
+        # format decisions, DESIGN.md section 13).  format_aware/csr_rmax
+        # thread through to BOTH the serving executor and run_naive's
+        # oracle engine, so format decisions stay part of the bitwise
+        # serve == run_naive contract.
+        self.format_aware = format_aware
+        self.csr_rmax = csr_rmax
         self.executor = runtime.FusedModelExecutor(
-            strategy=strategy, n_cc=n_cc, donate=donate,
-            collect_report=collect_report, keep_codes=keep_codes)
+            strategy=strategy, model=cost_model, n_cc=n_cc, donate=donate,
+            collect_report=collect_report, keep_codes=keep_codes,
+            format_aware=format_aware, csr_rmax=csr_rmax)
         self._compiled: Dict[int, CompiledModel] = {}
         self._input_names: Dict[int, List[str]] = {}
         self._naive: Optional[runtime.DynasparseEngine] = None
@@ -524,7 +535,9 @@ class GraphServeEngine:
         bits."""
         if self._naive is None:
             self._naive = runtime.DynasparseEngine(
-                strategy=self.strategy, n_cc=self.n_cc)
+                strategy=self.strategy, model=self.executor.model,
+                n_cc=self.n_cc, format_aware=self.format_aware,
+                csr_rmax=self.csr_rmax)
         results = []
         for req in requests:
             self._validate(req)

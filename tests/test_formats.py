@@ -1,35 +1,252 @@
-"""D2S / S2D / Block-CSR round-trip properties (hypothesis)."""
+"""D2S / S2D round-trip properties for every sparse format.
+
+Block formats (COO / Block-CSR / Block-CSC) and the row-level formats
+behind format-aware planning (flat CSR / padded ELL, DESIGN.md section 13)
+are pinned the same way as ``test_serving_properties.py``: each property
+is a plain checker function; hypothesis drives it with arbitrary draws
+when installed (CI), and a seeded random sweep drives the same checkers
+otherwise, so the properties are exercised everywhere.  Edge cases the
+random draws can miss -- nnz == 0, nnz == capacity, single-row/column
+shapes, tile-non-divisible shapes -- get dedicated deterministic tests.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core import formats
 
-RNG = np.random.default_rng(7)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
-def sparse(m, n, density):
-    x = RNG.normal(size=(m, n)).astype(np.float32)
-    return jnp.asarray(x * (RNG.random((m, n)) < density))
+def sparse(m, n, density, rng):
+    x = rng.normal(size=(m, n)).astype(np.float32)
+    return jnp.asarray(x * (rng.random((m, n)) < density))
 
 
-@settings(max_examples=25, deadline=None)
-@given(m=st.integers(1, 40), n=st.integers(1, 40),
-       density=st.floats(0.0, 1.0))
-def test_coo_roundtrip(m, n, density):
-    x = sparse(m, n, density)
+# -- checkers (shared by hypothesis and the seeded fallback) ----------------
+
+def check_coo_roundtrip(m, n, density, rng):
+    x = sparse(m, n, density, rng)
     coo = formats.dense_to_coo(x)
     back = formats.coo_to_dense(coo)
     np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
     assert int(coo.nnz) == int(np.count_nonzero(np.asarray(x)))
 
 
+def check_bcsr_roundtrip(mb, kb, density, rng):
+    x = sparse(mb * 8, kb * 8, density, rng)
+    b = formats.dense_to_bcsr(x, (8, 8))
+    back = formats.bcsr_to_dense(b)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def check_csr_roundtrip(m, n, density, rng):
+    """dense -> CSR -> dense is exact; indptr is monotone with the true nnz;
+    columns ascend within each row; CSR <-> COO agree entry for entry."""
+    x = sparse(m, n, density, rng)
+    c = formats.dense_to_csr(x)
+    np.testing.assert_array_equal(np.asarray(formats.csr_to_dense(c)),
+                                  np.asarray(x))
+    indptr = np.asarray(c.indptr)
+    assert indptr[0] == 0 and np.all(np.diff(indptr) >= 0)
+    assert int(c.nnz) == int(np.count_nonzero(np.asarray(x)))
+    cols = np.asarray(c.indices)
+    for r in range(m):
+        row_cols = cols[indptr[r]:indptr[r + 1]]
+        assert np.all(np.diff(row_cols) > 0), f"row {r} cols not ascending"
+    # the two D2S paths land on the same flat layout
+    c2 = formats.coo_to_csr(formats.dense_to_coo(x))
+    np.testing.assert_array_equal(np.asarray(c2.indptr), indptr)
+    nnz = int(c.nnz)
+    np.testing.assert_array_equal(np.asarray(c2.indices)[:nnz], cols[:nnz])
+    np.testing.assert_array_equal(np.asarray(c2.values)[:nnz],
+                                  np.asarray(c.values)[:nnz])
+    # ... and back out through COO
+    back = formats.coo_to_dense(formats.csr_to_coo(c))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def check_ell_roundtrip(m, n, density, rng, rmax=None):
+    """dense -> ELL keeps TRUE (uncapped) row counts; when every row fits
+    the round trip is exact and ell_matmul matches the dense product."""
+    x = sparse(m, n, density, rng)
+    row_nnz = np.count_nonzero(np.asarray(x), axis=1)
+    rmax = int(rmax if rmax is not None else max(int(row_nnz.max()), 1))
+    ell = formats.dense_to_ell(x, rmax=rmax)
+    np.testing.assert_array_equal(np.asarray(ell.row_counts), row_nnz)
+    if row_nnz.max() <= rmax:
+        np.testing.assert_array_equal(np.asarray(formats.ell_to_dense(ell)),
+                                      np.asarray(x))
+        y = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(formats.ell_matmul(ell, y)),
+                                   np.asarray(x) @ np.asarray(y),
+                                   atol=3e-4, rtol=3e-4)
+
+
+# -- hypothesis drivers (CI; inactive where hypothesis is absent) -----------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 40), n=st.integers(1, 40),
+           density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+    def test_coo_roundtrip_property(m, n, density, seed):
+        check_coo_roundtrip(m, n, density, np.random.default_rng(seed))
+
+    @settings(max_examples=25, deadline=None)
+    @given(mb=st.integers(1, 5), kb=st.integers(1, 5),
+           density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+    def test_bcsr_roundtrip_property(mb, kb, density, seed):
+        check_bcsr_roundtrip(mb, kb, density, np.random.default_rng(seed))
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 33), n=st.integers(1, 33),
+           density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+    def test_csr_roundtrip_property(m, n, density, seed):
+        check_csr_roundtrip(m, n, density, np.random.default_rng(seed))
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 40), n=st.integers(1, 40),
+           density=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+    def test_ell_roundtrip_property(m, n, density, seed):
+        check_ell_roundtrip(m, n, density, np.random.default_rng(seed))
+
+
+# -- seeded fallback sweeps (always run; same checkers) ---------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_coo_roundtrip_sweep(seed):
+    rng = np.random.default_rng(seed)
+    check_coo_roundtrip(int(rng.integers(1, 40)), int(rng.integers(1, 40)),
+                        float(rng.random()), rng)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bcsr_roundtrip_sweep(seed):
+    rng = np.random.default_rng(100 + seed)
+    check_bcsr_roundtrip(int(rng.integers(1, 5)), int(rng.integers(1, 5)),
+                         float(rng.random()), rng)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_csr_roundtrip_sweep(seed):
+    rng = np.random.default_rng(200 + seed)
+    check_csr_roundtrip(int(rng.integers(1, 33)), int(rng.integers(1, 33)),
+                        float(rng.random()), rng)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ell_roundtrip_sweep(seed):
+    rng = np.random.default_rng(300 + seed)
+    check_ell_roundtrip(int(rng.integers(1, 40)), int(rng.integers(1, 40)),
+                        float(rng.random()), rng)
+
+
+# -- deterministic edge cases -----------------------------------------------
+
+EDGE_SHAPES = [(1, 17), (23, 1), (33, 7), (16, 16)]
+
+
+@pytest.mark.parametrize("shape", EDGE_SHAPES)
+def test_csr_ell_zero_matrix(shape):
+    """nnz == 0: all formats represent the empty matrix exactly."""
+    x = jnp.zeros(shape, jnp.float32)
+    c = formats.dense_to_csr(x)
+    assert int(c.nnz) == 0
+    np.testing.assert_array_equal(np.asarray(c.indptr), 0)
+    np.testing.assert_array_equal(np.asarray(formats.csr_to_dense(c)), 0.0)
+    ell = formats.dense_to_ell(x, rmax=4)
+    np.testing.assert_array_equal(np.asarray(ell.row_counts), 0)
+    np.testing.assert_array_equal(np.asarray(formats.ell_to_dense(ell)), 0.0)
+    y = jnp.ones((shape[1], 3), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(formats.ell_matmul(ell, y)), 0.0)
+
+
+@pytest.mark.parametrize("shape", EDGE_SHAPES)
+def test_csr_full_capacity(shape):
+    """nnz == capacity: the fully-dense matrix survives when capacity is
+    exactly m*n (no pad slots at all)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    x = jnp.where(x == 0, 1.0, x)  # force fully dense
+    c = formats.dense_to_csr(x, capacity=shape[0] * shape[1])
+    assert int(c.nnz) == shape[0] * shape[1] == c.capacity
+    np.testing.assert_array_equal(np.asarray(formats.csr_to_dense(c)),
+                                  np.asarray(x))
+    ell = formats.dense_to_ell(x, rmax=shape[1])
+    np.testing.assert_array_equal(np.asarray(ell.row_counts), shape[1])
+    np.testing.assert_array_equal(np.asarray(formats.ell_to_dense(ell)),
+                                  np.asarray(x))
+
+
+def test_csr_capacity_clamp_drops_trailing():
+    """Row-major compaction drops exactly the trailing entries when the
+    static capacity is too small; indptr stays consistent with the clamp."""
+    x = jnp.ones((4, 4), jnp.float32)
+    c = formats.dense_to_csr(x, capacity=10)
+    assert int(c.nnz) == 10
+    np.testing.assert_array_equal(np.asarray(c.indptr), [0, 4, 8, 10, 10])
+    back = np.asarray(formats.csr_to_dense(c))
+    np.testing.assert_array_equal(back[:2], 1.0)
+    np.testing.assert_array_equal(back[2, :2], 1.0)
+    np.testing.assert_array_equal(back[2, 2:], 0.0)
+    np.testing.assert_array_equal(back[3], 0.0)
+
+
+def test_ell_overflowing_rows_report_true_counts():
+    """row_counts stay the TRUE per-row nnz even past rmax -- that is what
+    the runtime ``fits`` guard in dynasparse_matmul keys on."""
+    x = jnp.ones((3, 8), jnp.float32)
+    ell = formats.dense_to_ell(x, rmax=4)
+    np.testing.assert_array_equal(np.asarray(ell.row_counts), 8)
+    assert ell.rmax == 4
+
+
+def test_csr_to_ell_matches_dense_to_ell():
+    rng = np.random.default_rng(5)
+    x = sparse(33, 7, 0.4, rng)
+    rmax = int(np.count_nonzero(np.asarray(x), axis=1).max())
+    via_csr = formats.csr_to_ell(formats.dense_to_csr(x), rmax=max(rmax, 1))
+    direct = formats.dense_to_ell(x, rmax=max(rmax, 1))
+    np.testing.assert_array_equal(np.asarray(formats.ell_to_dense(via_csr)),
+                                  np.asarray(formats.ell_to_dense(direct)))
+
+
+@pytest.mark.parametrize("shape,rmax,bn", [
+    ((24, 32), 16, 8), ((5, 64), 8, 128), ((16, 16), 4, 16)])
+def test_csr_spmm_kernel_parity(shape, rmax, bn):
+    """The Pallas row-CSR kernel (interpret mode) matches the dense oracle
+    at the repo-wide kernel tolerance."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(3)
+    x = sparse(shape[0], shape[1], 0.2, rng)
+    # rmax must cover the densest row -- the executor's fits guard enforces
+    # the same precondition before taking the CSR path
+    rmax = max(rmax, int(np.count_nonzero(np.asarray(x), axis=1).max()))
+    y = jnp.asarray(rng.normal(size=(shape[1], 12)).astype(np.float32))
+    out = ops.csr_spmm(x, y, rmax=rmax, bn=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(x) @ np.asarray(y),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_csr_spmm_kernel_zero_matrix():
+    from repro.kernels import ops
+    x = jnp.zeros((8, 16), jnp.float32)
+    y = jnp.ones((16, 4), jnp.float32)
+    out = ops.csr_spmm(x, y, rmax=4, bn=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# -- pre-existing deterministic block-format tests --------------------------
+
 def test_coo_row_major_order():
-    x = sparse(10, 10, 0.3)
+    rng = np.random.default_rng(7)
+    x = sparse(10, 10, 0.3, rng)
     coo = formats.dense_to_coo(x)
     nnz = int(coo.nnz)
     keys = np.asarray(coo.rows)[:nnz] * 10 + np.asarray(coo.cols)[:nnz]
@@ -37,18 +254,9 @@ def test_coo_row_major_order():
     #                                   SpDMM/SPMM operand requirement)
 
 
-@settings(max_examples=25, deadline=None)
-@given(mb=st.integers(1, 5), kb=st.integers(1, 5),
-       density=st.floats(0.0, 1.0))
-def test_bcsr_roundtrip(mb, kb, density):
-    x = sparse(mb * 8, kb * 8, density)
-    b = formats.dense_to_bcsr(x, (8, 8))
-    back = formats.bcsr_to_dense(b)
-    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
-
-
 def test_bcsr_counts_and_sorted_cols():
-    x = sparse(32, 48, 0.15)
+    rng = np.random.default_rng(7)
+    x = sparse(32, 48, 0.15, rng)
     b = formats.dense_to_bcsr(x, (8, 8))
     occ = np.asarray(formats.tile_view(x, (8, 8)))
     occ = np.any(occ != 0, axis=(2, 3))
@@ -61,14 +269,14 @@ def test_bcsr_counts_and_sorted_cols():
 
 def test_bcsc_roundtrip_via_spmm_plan():
     from repro.kernels.spmm import plan_intersection
-    x = sparse(24, 32, 0.2)
-    y = sparse(32, 16, 0.3)
+    rng = np.random.default_rng(7)
+    x = sparse(24, 32, 0.2, rng)
+    y = sparse(32, 16, 0.3, rng)
     xb = formats.dense_to_bcsr(x, (8, 8))
     yb = formats.dense_to_bcsc(y, (8, 8))
     plan = plan_intersection(xb, yb)
     occ_x = np.any(np.asarray(formats.tile_view(x, (8, 8))) != 0, axis=(2, 3))
     occ_y = np.any(np.asarray(formats.tile_view(y, (8, 8))) != 0, axis=(2, 3))
-    want = np.einsum("ik,kj->ij", occ_x.astype(int), occ_y.astype(int))
     # counts = |{k: X[i,k] nonzero AND Y[k,j] nonzero}|
     inter = (occ_x[:, None, :] & occ_y.T[None, :, :]).sum(-1)
     np.testing.assert_array_equal(np.asarray(plan.counts), inter)

@@ -36,7 +36,17 @@ PUBLIC = [
     ("repro.core.dynasparse", ["dynasparse_matmul", "DynasparseResult",
                                "dynasparse_dense_equivalent"]),
     ("repro.core.analyzer", ["plan_codes", "plan_codes_from_profiles",
-                             "STRATEGIES"]),
+                             "plan_format", "STRATEGIES"]),
+    # the format-aware planning surface (DESIGN 13 / README "Format-aware
+    # aggregation")
+    ("repro.core.perf_model", ["Format", "Primitive", "TPUCostModel",
+                               "FPGACostModel"]),
+    ("repro.core.formats", ["CSRMatrix", "ELLMatrix", "COOMatrix",
+                            "dense_to_csr", "csr_to_dense", "coo_to_csr",
+                            "csr_to_coo", "dense_to_ell", "csr_to_ell",
+                            "ell_to_dense", "ell_matmul", "dense_to_coo",
+                            "coo_to_dense"]),
+    ("repro.kernels.ops", ["csr_spmm", "spdmm", "spmm", "matmul"]),
     ("repro.core.profiler", ["BlockProfile", "SparsityStats",
                              "block_density", "block_counts",
                              "batched_block_counts"]),
