@@ -39,6 +39,16 @@ and multi-lane >= ``--lane-tol`` x single-lane throughput.  CI's
 multidevice job runs it on 8 emulated host devices and uploads
 ``BENCH_serving.multidevice.smoke.json``.
 
+``--mesh --submesh`` is the disjoint-group ladder on top (DESIGN.md
+section 14): the resize scheduler partitions the mesh into per-lane
+device groups between waves (``plan_groups`` +
+``begin_wave(submesh=...)``), gating resize-vs-naive parity, the
+per-(bucket, group-size) trace bound, and submesh multi-lane >=
+``--lane-tol`` x single-lane throughput; the row also carries the
+shared-mesh lane speedup so submesh-vs-shared reads from one artifact
+(smoke artifact ``BENCH_serving.submesh.smoke.json``, full runs merge
+``submesh_rows`` into ``BENCH_serving.json``).
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke              # CI gate
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke --continuous # + online gate
@@ -64,6 +74,7 @@ _OUT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
 _SMOKE_OUT = _OUT.with_name("BENCH_serving.smoke.json")
 _CONT_SMOKE_OUT = _OUT.with_name("BENCH_serving.continuous.smoke.json")
 _MESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.multidevice.smoke.json")
+_SUBMESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.submesh.smoke.json")
 
 F_IN = 64
 SIZES = (56, 100, 150)            # -> buckets 64, 128, 256
@@ -163,14 +174,16 @@ def _bench_model(model: str, n_requests: int, slots: int, rounds: int
 
 
 def _replay_continuous(eng: GraphServeEngine, reqs, arrivals, budget: float,
-                       n_lanes=None):
+                       n_lanes=None, resize=False):
     """Open-loop arrival replay: submit each request when the wall clock
     passes its Poisson arrival time (deadline = arrival + ``budget``),
     polling the scheduler in between; drain flushes the tail once the
     stream ends.  Returns (results, per-request sojourn latencies,
     hit-rate, busy-span seconds, per-wave loads).  ``n_lanes`` overrides
-    the scheduler's lane count (None = one per engine mesh device)."""
-    srv = ContinuousGraphServer(eng, n_lanes=n_lanes)
+    the scheduler's lane count (None = one per engine mesh device);
+    ``resize`` switches the lanes to disjoint per-wave device groups
+    (DESIGN.md section 14)."""
+    srv = ContinuousGraphServer(eng, n_lanes=n_lanes, resize=resize)
     w0 = len(eng.wave_loads)
     t0 = time.monotonic()
     abs_arrival = t0 + np.asarray(arrivals)
@@ -196,22 +209,47 @@ def _replay_continuous(eng: GraphServeEngine, reqs, arrivals, budget: float,
 
 
 def _best_replay(eng: GraphServeEngine, reqs, rate: float, budget: float,
-                 rounds: int, n_lanes=None):
+                 rounds: int, n_lanes=None, resize=False):
     """Best-of-rounds Poisson replay, the ONE arrival methodology every
-    continuous ladder shares (sync-vs-continuous AND the mesh lane
-    comparison): per round, seeded inter-arrival draws (seed 100+r),
-    a full `_replay_continuous`, and an all-served assertion; the round
-    with the smallest busy span wins.  Returns (span, hit_rate,
-    latencies, wave_loads, last_arrival)."""
+    continuous ladder shares: per round, seeded inter-arrival draws
+    (seed 100+r), a full `_replay_continuous`, and an all-served
+    assertion; the round with the smallest busy span wins.  Returns
+    (span, hit_rate, latencies, wave_loads, last_arrival).  Ladders that
+    COMPARE lane configs on one engine use `_interleaved_replays`, which
+    runs the same rounds round-robin across configs."""
     best = None
     for r in range(rounds):
         rng = np.random.default_rng(100 + r)
         arrivals = np.cumsum(rng.exponential(1.0 / rate, len(reqs)))
         results, lat, hit_rate, span, loads = _replay_continuous(
-            eng, reqs, arrivals, budget, n_lanes=n_lanes)
+            eng, reqs, arrivals, budget, n_lanes=n_lanes, resize=resize)
         assert len(results) == len(reqs)
         if best is None or span < best[0]:
             best = (span, hit_rate, lat, loads, float(arrivals[-1]))
+    return best
+
+
+def _interleaved_replays(eng: GraphServeEngine, reqs, rate: float,
+                         budget: float, rounds: int, configs) -> dict:
+    """`_best_replay` for lane COMPARISONS: round r replays every config
+    in ``configs`` (tuples of (key, n_lanes, resize)) once, on the same
+    seeded arrivals, before round r+1 starts.  Sequential best-of-rounds
+    per config would let slow machine drift mid-bench land entirely on
+    whichever config runs last (observed: a whole ladder's multi-lane
+    configs measuring 0.8-0.9x because they always follow single-lane);
+    round-robin spreads the drift across all configs, so the per-config
+    best spans stay comparable.  Returns {key: _best_replay tuple}."""
+    best = {}
+    for r in range(rounds):
+        rng = np.random.default_rng(100 + r)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, len(reqs)))
+        for key, n_lanes, resize in configs:
+            results, lat, hit_rate, span, loads = _replay_continuous(
+                eng, reqs, arrivals, budget, n_lanes=n_lanes, resize=resize)
+            assert len(results) == len(reqs)
+            if key not in best or span < best[key][0]:
+                best[key] = (span, hit_rate, lat, loads,
+                             float(arrivals[-1]))
     return best
 
 
@@ -331,18 +369,20 @@ def _bench_multidevice(model: str, n_requests: int, rounds: int,
     capacity = n_requests / serve_wall
     rate = load * capacity
     budget = budget_factor * serve_wall
+    lane_configs = [(1, 1, False)]
+    if devices > 1:                          # single device: both identical
+        lane_configs.append((devices, devices, False))
+    best = _interleaved_replays(eng, reqs, rate, budget, rounds,
+                                lane_configs)
     lanes_stats = {}
-    for n_lanes in (1, devices):
-        span, hit_rate, lat, loads, _ = _best_replay(
-            eng, reqs, rate, budget, rounds, n_lanes=n_lanes)
+    for n_lanes, _, _ in lane_configs:
+        span, hit_rate, lat, loads, _ = best[n_lanes]
         lanes_stats[n_lanes] = {
             "throughput_rps": n_requests / span,
             "deadline_hit_rate": hit_rate,
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "padding_efficiency": _padding_efficiency(loads),
         }
-        if devices == 1:                     # single device: both identical
-            break
     multi = lanes_stats[devices]
     single = lanes_stats[1]
     row = {
@@ -375,8 +415,11 @@ def run_mesh(*, smoke: bool = False, fast: bool = True, load: float = 2.0,
     # the lane comparison needs enough arrivals to fill waves past the
     # 8-slot mesh AND a long enough busy span that scheduler-noise doesn't
     # swamp the single-vs-multi-lane delta: 16 requests keep the CI smoke
-    # job short; full runs stretch to 32
+    # job short; full runs stretch to 32 and take extra best-of rounds
+    # (replays are cheap next to the warmup compiles, and on an emulated
+    # mesh -- 8 devices timesharing few cores -- per-round noise is large)
     n_requests = 16 if smoke else 32
+    rounds = rounds if smoke else max(rounds, 5)
     rows = [_bench_multidevice(m, n_requests, rounds, load, budget_factor)
             for m in models]
     payload = {
@@ -387,16 +430,177 @@ def run_mesh(*, smoke: bool = False, fast: bool = True, load: float = 2.0,
         "rows": rows,
     }
     if smoke:
+        # the smoke artifact is a CI diagnostic: write it even when the
+        # gate below fails, so the uploaded json shows WHICH row lagged
         _MESH_SMOKE_OUT.write_text(json.dumps(payload, indent=2) + "\n")
-    elif write_json:
+    lagging = [r for r in rows if r["lane_speedup"] < lane_tol]
+    if lagging:
+        # gate BEFORE the merge: a failed run must not overwrite the
+        # recorded trajectory in BENCH_serving.json
+        sys.exit(f"multi-lane throughput below {lane_tol}x single-lane: "
+                 f"{[(r['model'], round(r['lane_speedup'], 2)) for r in lagging]}")
+    if not smoke and write_json:
         data = json.loads(_OUT.read_text()) if _OUT.exists() else {}
         data["multidevice_rows"] = rows
         data["multidevice_devices"] = payload["devices"]
         _OUT.write_text(json.dumps(data, indent=2) + "\n")
+    return rows
+
+
+def _warm_submeshes(eng: GraphServeEngine, mesh, devices: int) -> set:
+    """Compile the submesh programs the resize policy can reach, so the
+    timed replays measure dispatch, not jit.
+
+    XLA compiles one executable per device PLACEMENT -- the abstract-mesh
+    trace is shared across equal-size groups, the binary is not -- so each
+    group size is warmed at EVERY aligned offset (its uniform partition),
+    not just at device 0; a replay whose plan lands a group on unwarmed
+    devices would eat a full compile mid-stream.  Each group dispatches
+    TWICE per bucket: the second wall is steady-state, so the engine's
+    recorded ``group_walls`` (the resize scheduler's per-size EWMA seeds,
+    taken as the min) are not poisoned by the ~1000x compile outlier.
+    Returns the warmed group sizes."""
+    from repro.distributed import sharding as dist_sharding
+    from repro.serving.graph_engine import GraphRequest
+    sizes, s = set(), 1
+    while s <= devices:
+        if eng.slots % s == 0:
+            sizes.add(s)
+        s *= 2
+    dummy = GraphRequest(np.eye(2, dtype=np.float32),
+                         np.zeros((2, eng.f_in), np.float32), request_id=-1)
+    for size in sorted(sizes):
+        n_groups = devices // size
+        part = [size] * n_groups + [1] * (devices - size * n_groups)
+        for sub in dist_sharding.partition_mesh(mesh, part)[:n_groups]:
+            for bucket in eng.buckets:
+                for _ in range(2):
+                    eng.finish_wave(eng.begin_wave(bucket, [dummy],
+                                                   submesh=sub))
+    return sizes
+
+
+def _bench_submesh(model: str, n_requests: int, rounds: int,
+                   load: float, budget_factor: float) -> dict:
+    """Disjoint-group resize dispatch vs the shared-mesh lanes it replaces.
+
+    One device-sharded engine; the SAME Poisson stream is replayed through
+    (a) a single-lane scheduler, (b) the PR-5 shared-mesh one-lane-per-
+    device scheduler, and (c) the resize scheduler dispatching every wave
+    on its own disjoint device group (``plan_groups`` +
+    ``begin_wave(submesh=...)``).  Gates (``--mesh --submesh --smoke``):
+    resize-vs-naive bitwise parity, <= one trace per (bucket, group size),
+    and submesh multi-lane throughput >= ``--lane-tol`` x single-lane.
+    The row also records the shared-mesh lane speedup so the acceptance
+    comparison (submesh >= shared baseline) reads from one artifact.
+    """
+    from repro.distributed import sharding as dist_sharding
+    mesh = dist_sharding.cores_mesh()
+    devices = int(mesh.devices.size)
+    slots = devices * max(1, 4 // devices)     # >= 4, divisible by devices
+    reqs = random_requests(n_requests, f_in=F_IN, sizes=SIZES, seed=7)
+    eng = GraphServeEngine(model, f_in=F_IN, hidden=16, n_classes=7,
+                           slots=slots, weight_seed=0, mesh=mesh)
+    eng.serve(reqs)                          # warm the full-mesh program
+    naive = {r.request_id: r for r in eng.run_naive(reqs)}
+    sizes = _warm_submeshes(eng, mesh, devices)
+    traces0 = eng.executor.trace_count
+    # parity gate: one resize replay, every result bitwise == run_naive
+    rng = np.random.default_rng(100)
+    arrivals = np.cumsum(rng.exponential(0.002, len(reqs)))
+    done, _, _, _, _ = _replay_continuous(eng, reqs, arrivals, 60.0,
+                                          resize=True)
+    for r in done:
+        if not np.array_equal(r.logits, naive[r.request_id].logits):
+            sys.exit(f"submesh parity FAILED: {model} request "
+                     f"{r.request_id} differs from per-request engine "
+                     f"under disjoint-group dispatch")
+    if eng.executor.trace_count != traces0:
+        sys.exit(f"submesh trace regression: {model} grew "
+                 f"{eng.executor.trace_count - traces0} traces past the "
+                 f"{len(eng.buckets)} buckets x {len(sizes)} group sizes "
+                 f"warmup")
+    serve_wall = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        serve_wall = min(serve_wall, time.perf_counter() - t0)
+    capacity = n_requests / serve_wall
+    rate = load * capacity
+    budget = budget_factor * serve_wall
+    configs = (("single_lane", 1, False),
+               ("shared_multi_lane", devices, False),
+               ("submesh_multi_lane", devices, True))
+    best = _interleaved_replays(eng, reqs, rate, budget, rounds, configs)
+    stats = {}
+    for key, _, _ in configs:
+        span, hit_rate, lat, loads, _ = best[key]
+        stats[key] = {
+            "throughput_rps": n_requests / span,
+            "deadline_hit_rate": hit_rate,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "padding_efficiency": _padding_efficiency(loads),
+        }
+    single = stats["single_lane"]["throughput_rps"]
+    row = {
+        "mode": "submesh", "model": model, "n_requests": n_requests,
+        "devices": devices, "slots": slots, "load": load,
+        "budget_factor": budget_factor,
+        "group_sizes_warmed": sorted(sizes),
+        "sync_sharded_throughput_rps": capacity,
+        **stats,
+        "lane_speedup": (stats["submesh_multi_lane"]["throughput_rps"]
+                         / single),
+        "shared_lane_speedup": (stats["shared_multi_lane"]["throughput_rps"]
+                                / single),
+    }
+    row["submesh_vs_shared"] = (row["lane_speedup"]
+                                / row["shared_lane_speedup"])
+    emit(f"serving.submesh.{model}",
+         stats["submesh_multi_lane"]["p99_ms"] * 1e3,
+         f"devices={devices} "
+         f"submesh={stats['submesh_multi_lane']['throughput_rps']:.1f}rps "
+         f"({row['lane_speedup']:.2f}x single-lane, shared-mesh lanes "
+         f"{row['shared_lane_speedup']:.2f}x) "
+         f"hit_rate={stats['submesh_multi_lane']['deadline_hit_rate']:.2f}")
+    return row
+
+
+def run_submesh(*, smoke: bool = False, fast: bool = True, load: float = 2.0,
+                budget_factor: float = 2.0, lane_tol: float = 1.0,
+                write_json: bool = True) -> list:
+    """Disjoint-submesh ladder (``--mesh --submesh``): resize parity +
+    per-(bucket, group size) trace gates, then single-lane vs shared-mesh
+    lanes vs disjoint-group lanes on the same Poisson stream.  Smoke
+    writes ``BENCH_serving.submesh.smoke.json`` (the multidevice CI job's
+    artifact); a full run merges ``submesh_rows`` into
+    ``BENCH_serving.json`` without disturbing the other ladders."""
+    models, n_requests, rounds = _scale(smoke, fast)
+    n_requests = 16 if smoke else 32           # match the --mesh ladder
+    rounds = rounds if smoke else max(rounds, 5)
+    rows = [_bench_submesh(m, n_requests, rounds, load, budget_factor)
+            for m in models]
+    payload = {
+        "bench": "disjoint-submesh resize dispatch vs shared-mesh lanes",
+        "device": jax.default_backend(),
+        "devices": jax.device_count(),
+        "rounds": rounds,
+        "rows": rows,
+    }
+    if smoke:
+        # CI diagnostic: written even on gate failure (see run_mesh)
+        _SUBMESH_SMOKE_OUT.write_text(json.dumps(payload, indent=2) + "\n")
     lagging = [r for r in rows if r["lane_speedup"] < lane_tol]
     if lagging:
-        sys.exit(f"multi-lane throughput below {lane_tol}x single-lane: "
+        # gate BEFORE the merge, so a lagging run can't pollute the rows
+        sys.exit(f"submesh multi-lane throughput below {lane_tol}x "
+                 f"single-lane: "
                  f"{[(r['model'], round(r['lane_speedup'], 2)) for r in lagging]}")
+    if not smoke and write_json:
+        data = json.loads(_OUT.read_text()) if _OUT.exists() else {}
+        data["submesh_rows"] = rows
+        data["submesh_devices"] = payload["devices"]
+        _OUT.write_text(json.dumps(data, indent=2) + "\n")
     return rows
 
 
@@ -495,6 +699,14 @@ if __name__ == "__main__":
                          "throughput; with --smoke writes "
                          "BENCH_serving.multidevice.smoke.json, otherwise "
                          "merges multidevice_rows into BENCH_serving.json")
+    ap.add_argument("--submesh", action="store_true",
+                    help="with --mesh: run the disjoint-submesh ladder "
+                         "instead -- resize-scheduler parity, the per-"
+                         "(bucket, group size) trace bound, and single-"
+                         "lane vs shared-mesh vs disjoint-group "
+                         "throughput; with --smoke writes "
+                         "BENCH_serving.submesh.smoke.json, otherwise "
+                         "merges submesh_rows into BENCH_serving.json")
     ap.add_argument("--lane-tol", type=float, default=1.0,
                     help="mesh gate: fail if multi-lane continuous "
                          "throughput < tol x single-lane on the same "
@@ -522,14 +734,22 @@ if __name__ == "__main__":
                     help="deadline budget as a multiple of the expected "
                          "full-service span")
     args = ap.parse_args()
+    if args.submesh and not args.mesh:
+        ap.error("--submesh extends the --mesh ladder; pass both")
     if args.mesh:
         # --mesh is its own ladder with its own gates (--lane-tol); the
         # sync/continuous gate flags do not apply to it
         if args.continuous:
             ap.error("--mesh runs its own ladder; the continuous gates "
                      "run in the (non-mesh) --smoke --continuous job")
-        run_mesh(smoke=args.smoke, fast=not args.full, load=args.load,
-                 budget_factor=args.budget_factor, lane_tol=args.lane_tol)
+        if args.submesh:
+            run_submesh(smoke=args.smoke, fast=not args.full,
+                        load=args.load, budget_factor=args.budget_factor,
+                        lane_tol=args.lane_tol)
+        else:
+            run_mesh(smoke=args.smoke, fast=not args.full, load=args.load,
+                     budget_factor=args.budget_factor,
+                     lane_tol=args.lane_tol)
         sys.exit(0)
     if args.smoke:
         _parity("gcn")

@@ -236,12 +236,16 @@ class TPUCostModel:
                        + m * d * self.dtype_bytes)             # output
         return self._roofline_seconds(flops, bytes_moved, self.eff_csr)
 
-    def transform_seconds(self, m, n) -> ArrayLike:
-        """Dense -> row-CSR conversion (D2S): reads the dense operand and
-        writes the compacted view, at conversion efficiency (prefix networks
-        and rank-select gathers, far off streaming bandwidth), plus a fixed
+    def transform_seconds(self, m, n, rmax) -> ArrayLike:
+        """Dense -> row-CSR conversion (D2S): reads the dense (m, n) operand
+        and writes the padded (m, rmax) ELL view -- int32 column ids plus
+        values, so the write side scales with the ``rmax`` row budget, NOT
+        with n (``dense_to_ell`` never materialises an (m, n) compacted
+        buffer) -- at conversion efficiency (prefix networks and
+        rank-select gathers, far off streaming bandwidth), plus a fixed
         multi-pass overhead."""
-        bytes_moved = 2.0 * m * n * self.dtype_bytes
+        bytes_moved = (m * n * self.dtype_bytes                # dense read
+                       + m * rmax * (4 + self.dtype_bytes))    # cols + vals
         return (bytes_moved / (self.spec.hbm_bandwidth * self.eff_transform)
                 + self.transform_overhead_s)
 
@@ -262,7 +266,7 @@ class TPUCostModel:
         """
         bm, bk, bn_ = block_dims
         block_s = occupied_steps * self.gemm_seconds(bm, bk, bn_)
-        csr_s = self.transform_seconds(m, n) + self.csr_spmm_seconds(
+        csr_s = self.transform_seconds(m, n, rmax) + self.csr_spmm_seconds(
             m, n, d, rmax)
         fits = nnz * self.csr_fill_slack <= rmax * m
         return jnp.where((csr_s < block_s) & fits,

@@ -710,23 +710,28 @@ class FusedModelExecutor:
         return fn, needed
 
     def _build_batch(self, compiled: CompiledModel, shared_needed: tuple,
-                     request_needed: tuple, mesh: Optional[Mesh] = None):
-        """One jitted program per (model, shared shapes, wave shapes): a
-        ``lax.scan`` over the stacked per-request tensors whose body is the
-        same fused kernel walk as the single-inference program.  Shared
-        tensors (weights) ride in as scan constants with host-cached
+                     request_needed: tuple, lanes: Optional[int] = None):
+        """One jitted program per (model, shared shapes, wave shapes, lane
+        count): a ``lax.scan`` over the stacked per-request tensors whose
+        body is the same fused kernel walk as the single-inference program.
+        Shared tensors (weights) ride in as scan constants with host-cached
         profiles; per-request graph inputs are profiled INSIDE the program
         (``profiler.batched_block_counts``, one fused reduction per
         (tensor, granularity) for the whole wave) -- each request is a new
         graph, so its profiling is the runtime's job, not the host's.
 
-        With a ``mesh`` (1-D, axis ``distributed.sharding.CORES_AXIS``) the
-        scan body is ``shard_map``-ed over the request axis: every device
-        runs the identical scan over ITS slice of the wave -- chips as the
-        paper's Computation Cores, the Alg. 8 task queue split by the
-        caller's cost-aware bins (``core.scheduler.assign_bins``).
-        Requests are independent (the scan carries nothing), so no
-        collectives are needed and per-request numerics are unchanged."""
+        With ``lanes`` (a device-group size) the scan body is
+        ``shard_map``-ed over the request axis: every device runs the
+        identical scan over ITS slice of the wave -- chips as the paper's
+        Computation Cores, the Alg. 8 task queue split by the caller's
+        cost-aware bins (``core.scheduler.assign_bins``).  The program is
+        traced against the ABSTRACT ``lanes``-device cores mesh
+        (``distributed.sharding.abstract_cores_mesh``), never a concrete
+        device list: the concrete devices bind at call time from the
+        batched inputs' shardings, so disjoint same-size submeshes
+        (``partition_mesh`` groups) all reuse this one program.  Requests
+        are independent (the scan carries nothing), so no collectives are
+        needed and per-request numerics are unchanged."""
         kernels = compiled.graph.topo_order()
         flows = self._resolved_flows(compiled)
         final = kernels[-1].out
@@ -755,12 +760,12 @@ class FusedModelExecutor:
             _, (outs, sides) = jax.lax.scan(one, None, (batched, wave_counts))
             return outs, sides
 
-        if mesh is not None:
+        if lanes is not None:
             # shared + profiles replicated, the request axis sharded in AND
             # out; check_rep off because the per-shard scans never touch a
             # replicated output.
             body = shard_map(
-                wave_body, mesh=mesh,
+                wave_body, mesh=dist_sharding.abstract_cores_mesh(lanes),
                 in_specs=(PartitionSpec(), PartitionSpec(),
                           dist_sharding.wave_spec()),
                 out_specs=dist_sharding.wave_spec(),
@@ -876,14 +881,12 @@ class FusedModelExecutor:
                     f"wave of {b} slots not divisible by {lanes} mesh "
                     f"devices")
 
-        # the shard_map program closes over the CONCRETE mesh, so the key
-        # carries the device identities, not just the lane count -- two
-        # same-size meshes over different device groups must not share a
-        # program.  A serving engine pinned to one mesh still gets exactly
-        # one trace per (bucket, lane count).
-        mesh_key = (None if mesh is None
-                    else tuple(d.id for d in mesh.devices.flat))
-        key = ("wave", mesh_key,
+        # the shard_map program is traced against the ABSTRACT cores mesh
+        # (concrete devices bind at call time from the inputs' shardings),
+        # so the key carries only the GROUP SIZE: disjoint same-size device
+        # groups -- partition_mesh lanes -- share one compiled program, and
+        # the trace bound is one per (bucket, group size).
+        key = ("wave", None if mesh is None else lanes,
                self._signature(compiled, shared), self._tensor_sig(batched))
         fn = self._programs.get(key)
         if fn is not None:
@@ -891,7 +894,7 @@ class FusedModelExecutor:
         else:
             self.cache_misses += 1
             fn = self._build_batch(compiled, shared_needed, request_needed,
-                                   mesh=mesh)
+                                   lanes=None if mesh is None else lanes)
             self._programs[key] = fn
 
         if mesh is not None:
@@ -975,14 +978,17 @@ class FusedModelExecutor:
         count gets exactly one trace per (shape bucket, lane count).
 
         ``mesh`` (a 1-D ``cores`` mesh from ``distributed.sharding
-        .cores_mesh``) shards the wave's request axis across its devices:
-        device d scans slots ``[d*B/D, (d+1)*B/D)``, so the caller should
-        place requests into slots by cost-aware bins
-        (``core.scheduler.assign_bins``; ``serving.graph_engine`` does).
-        Requires ``B % D == 0``.  Outputs are bitwise-identical to the
-        unsharded program -- sharding splits the task queue, never the
-        numerics -- which collapses to the same single-lane scan on a
-        1-device mesh.
+        .cores_mesh``, or any disjoint submesh of one from
+        ``distributed.sharding.partition_mesh``) shards the wave's request
+        axis across its devices: device d scans slots ``[d*B/D,
+        (d+1)*B/D)``, so the caller should place requests into slots by
+        cost-aware bins (``core.scheduler.assign_bins``;
+        ``serving.graph_engine`` does).  Requires ``B % D == 0``.  Outputs
+        are bitwise-identical to the unsharded program -- sharding splits
+        the task queue, never the numerics -- which collapses to the same
+        single-lane scan on a 1-device mesh.  Programs are traced against
+        the abstract D-device mesh, so every same-size device group reuses
+        one compiled program (one trace per (bucket, group size)).
         """
         return self.finish_batch(
             self.launch_batch(compiled, shared, batched, mesh=mesh))

@@ -16,16 +16,17 @@ memories.  Batch=1 long-context falls back to model-axis-only sharding.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import AbstractMesh, Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["NamedSharding", "P", "batch_axes", "param_spec",
            "param_shardings", "cache_spec", "cache_shardings",
            "batch_spec", "batch_shardings", "replicated", "describe",
-           "CORES_AXIS", "cores_mesh", "wave_spec", "wave_shardings"]
+           "CORES_AXIS", "cores_mesh", "wave_spec", "wave_shardings",
+           "partition_devices", "partition_mesh", "abstract_cores_mesh"]
 
 # the serving mesh axis: each device along it plays one of the paper's
 # Computation Cores, executing its own slice of an admission wave
@@ -47,6 +48,64 @@ def cores_mesh(n_devices: Optional[int] = None) -> Mesh:
                 f"cores_mesh({n_devices}) with {len(devs)} devices visible")
         devs = devs[:n_devices]
     return Mesh(np.asarray(devs), (CORES_AXIS,))
+
+
+def partition_devices(devices: Sequence, group_sizes: Sequence[int]
+                      ) -> List[list]:
+    """Split ``devices`` into contiguous disjoint groups of ``group_sizes``.
+
+    The pure partition rule behind :func:`partition_mesh` (property-tested
+    on plain lists in ``tests/test_submesh_partition.py``): every device
+    lands in exactly ONE group, groups keep device order, and the sizes
+    must form an exact cover -- every size positive, summing to
+    ``len(devices)``.  Anything else raises ``ValueError`` (a dispatch
+    layer must never silently drop or double-book a device).
+    """
+    sizes = [int(s) for s in group_sizes]
+    if not sizes:
+        raise ValueError("partition into zero groups")
+    bad = [s for s in sizes if s < 1]
+    if bad:
+        raise ValueError(f"group sizes must be >= 1, got {sizes}")
+    if sum(sizes) != len(devices):
+        raise ValueError(
+            f"group sizes {sizes} sum to {sum(sizes)}, not the "
+            f"{len(devices)} devices to partition")
+    out, at = [], 0
+    for s in sizes:
+        out.append(list(devices[at: at + s]))
+        at += s
+    return out
+
+
+def partition_mesh(mesh: Mesh, group_sizes: Sequence[int]) -> List[Mesh]:
+    """Partition a 1-D ``cores`` mesh into disjoint per-lane submeshes.
+
+    Every device of ``mesh`` lands in exactly one group (sizes must be
+    positive and sum to the device count -- :func:`partition_devices`);
+    each group becomes its own 1-D ``cores`` mesh, so dispatch lanes can
+    execute waves on genuinely disjoint hardware (DESIGN.md section 14).
+    Submesh programs are traced against :func:`abstract_cores_mesh`, so
+    equal-size groups share ONE compiled program -- the trace bound is per
+    group *size*, not per device identity.
+    """
+    if len(mesh.axis_names) != 1 or mesh.axis_names[0] != CORES_AXIS:
+        raise ValueError(
+            f"partition_mesh needs a 1-D {CORES_AXIS!r} mesh, got "
+            f"{mesh.axis_names}")
+    groups = partition_devices(list(mesh.devices.flat), group_sizes)
+    return [Mesh(np.asarray(g), (CORES_AXIS,)) for g in groups]
+
+
+def abstract_cores_mesh(n_devices: int) -> AbstractMesh:
+    """Device-free 1-D ``cores`` mesh of ``n_devices``: the trace key for
+    submesh dispatch.  A ``shard_map`` program built over the abstract
+    mesh binds to CONCRETE devices at call time from its inputs'
+    shardings, so one jitted program serves every disjoint device group of
+    the same size (one trace per (bucket, group size))."""
+    if n_devices < 1:
+        raise ValueError(f"abstract_cores_mesh({n_devices})")
+    return AbstractMesh(((CORES_AXIS, int(n_devices)),))
 
 
 def wave_spec() -> P:

@@ -174,8 +174,13 @@ class GraphServeEngine:
     slot ranges by predicted cost (:meth:`request_cost`) and each device
     scans its own range (DESIGN.md section 12).  Outputs stay bitwise
     identical -- on any mesh -- and the trace bound becomes one per
-    (bucket, lane count); ``slots`` must divide by the mesh's device
-    count.
+    (bucket, group size); ``slots`` must divide by the mesh's device
+    count.  :meth:`begin_wave` additionally takes a per-wave ``submesh``
+    (a disjoint device group from ``distributed.sharding
+    .partition_mesh``), placing the wave's requests within that group
+    only -- the disjoint-lane dispatch of DESIGN.md section 14; programs
+    are shared across equal-size groups, so resizing groups between waves
+    never re-traces.
     """
 
     def __init__(self, model: str = "gcn", *, f_in: int, hidden: int = 16,
@@ -242,6 +247,10 @@ class GraphServeEngine:
         # per-bucket dispatch walls: what the continuous scheduler's EWMA
         # wave-wall estimator seeds from (DESIGN.md section 11)
         self.bucket_walls: Dict[int, List[float]] = {}
+        # per-group-size dispatch walls (key: the device-group size the
+        # wave ran on; 1 when unsharded): the resize policy's per-size
+        # lane-wall estimates seed from these (DESIGN.md section 14)
+        self.group_walls: Dict[int, List[float]] = {}
         self.last_wave_report: Optional[runtime.InferenceReport] = None
 
     # -- admission ----------------------------------------------------------
@@ -410,36 +419,49 @@ class GraphServeEngine:
         req._dynasparse_cost = (memo_key, cost)
         return cost
 
-    def _slot_layout(self, wave: Sequence[GraphRequest]) -> List[int]:
-        """Request -> slot placement for one wave.
+    def _slot_layout(self, wave: Sequence[GraphRequest],
+                     lanes: Optional[int] = None) -> List[int]:
+        """Request -> slot placement for one wave over ``lanes`` devices
+        (default: the engine mesh's device count).
 
         Unsharded (or single-device) waves keep the FIFO layout.  On a
-        multi-device mesh, device d owns the contiguous slot range
+        multi-device group, device d owns the contiguous slot range
         ``[d*slots/lanes, (d+1)*slots/lanes)``; requests are LPT-binned
         over the per-request perf_model costs (capacity = each device's
         slot count) so every device's scan carries a balanced predicted
         load, and dummies fill whatever slots remain.  Placement never
         affects numerics (request isolation), only load balance.
         """
-        if self.lanes == 1:
+        lanes = self.lanes if lanes is None else lanes
+        if lanes == 1:
             return list(range(len(wave)))
-        per_lane = self.slots // self.lanes
+        per_lane = self.slots // lanes
         bins = core_scheduler.assign_bins(
-            [self.request_cost(r) for r in wave], self.lanes,
+            [self.request_cost(r) for r in wave], lanes,
             capacity=per_lane)
-        next_slot = [lane * per_lane for lane in range(self.lanes)]
+        next_slot = [lane * per_lane for lane in range(lanes)]
         slots = []
         for lane in bins:
             slots.append(next_slot[lane])
             next_slot[lane] += 1
         return slots
 
-    def begin_wave(self, bucket: int, wave: Sequence[GraphRequest]
-                   ) -> "InFlightWave":
+    def begin_wave(self, bucket: int, wave: Sequence[GraphRequest],
+                   submesh: Optional[Mesh] = None) -> "InFlightWave":
         """Launch one admission wave WITHOUT blocking: pad each request to
         ``bucket`` (dummies fill the unused slots), place requests into
         slots by the cost-aware layout (:meth:`_slot_layout`), and hand the
         stacked tensors to ``FusedModelExecutor.launch_batch``.
+
+        ``submesh`` dispatches THIS wave on a specific device group (a
+        disjoint submesh from ``distributed.sharding.partition_mesh``)
+        instead of the engine's full mesh: requests are placed within the
+        group's slot ranges only, and the wave executes on the group's
+        devices alone -- the per-lane disjoint dispatch the resize-capable
+        continuous scheduler drives (DESIGN.md section 14).  ``slots``
+        must divide by the group's device count; equal-size groups share
+        one compiled program, so the trace bound stays one per (bucket,
+        group size).
 
         Returns an :class:`InFlightWave`; :meth:`finish_wave` blocks on it
         and yields the results.  The split is what the continuous
@@ -450,8 +472,14 @@ class GraphServeEngine:
         if not 0 < len(wave) <= self.slots:
             raise ValueError(
                 f"wave of {len(wave)} requests (engine slots={self.slots})")
+        mesh = self.mesh if submesh is None else submesh
+        lanes = 1 if mesh is None else int(mesh.devices.size)
+        if submesh is not None and self.slots % lanes:
+            raise ValueError(
+                f"slots={self.slots} not divisible by the {lanes}-device "
+                f"submesh group")
         cm = self._compile(bucket)
-        slot_of = self._slot_layout(wave)
+        slot_of = self._slot_layout(wave, lanes)
         padded: List[Optional[Dict[str, np.ndarray]]] = [None] * self.slots
         for req, slot in zip(wave, slot_of):
             padded[slot] = self._padded(req, bucket)
@@ -464,10 +492,10 @@ class GraphServeEngine:
         # one device and reshard from there.
         batched = {name: np.stack([p[name] for p in padded])
                    for name in self._input_names[bucket]}
-        if self.mesh is None:
+        if mesh is None:
             batched = {name: jnp.asarray(v) for name, v in batched.items()}
         pending = self.executor.launch_batch(cm, self.weights, batched,
-                                             mesh=self.mesh)
+                                             mesh=mesh)
         index = self.waves
         self.waves += 1
         return InFlightWave(bucket=bucket, wave=list(wave), slot_of=slot_of,
@@ -491,6 +519,8 @@ class GraphServeEngine:
         self.wave_walls.append(rep.fused_wall_seconds)
         self.wave_loads.append((len(inflight.wave), self.slots))
         self.bucket_walls.setdefault(inflight.bucket, []).append(
+            rep.fused_wall_seconds)
+        self.group_walls.setdefault(inflight.pending.lanes, []).append(
             rep.fused_wall_seconds)
         return results
 

@@ -68,8 +68,67 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import scheduler as core_scheduler
+from repro.distributed import sharding as dist_sharding
 from repro.serving.graph_engine import (GraphRequest, GraphResult,
                                         GraphServeEngine)
+
+
+def plan_groups(n_devices: int, demands: Sequence[float], slots: int,
+                max_groups: Optional[int] = None) -> List[int]:
+    """Plan disjoint device-group sizes for one dispatch tick.
+
+    Pure resize policy (property-tested in
+    ``tests/test_submesh_partition.py``): given ``n_devices`` mesh devices,
+    the estimated walls of the waves wanting to run (``demands``), and the
+    engine's wave ``slots``, return group sizes for
+    ``distributed.sharding.partition_mesh`` -- every size positive,
+    dividing ``slots`` (the engine splits a wave's slots evenly over its
+    group), summing EXACTLY to ``n_devices``.
+
+    The first ``k = min(len(demands), n_devices, max_groups)`` entries are
+    the demand-assigned groups, aligned with ``demands`` sorted descending
+    (largest demand <-> widest group); trailing ``1``s are spare devices
+    kept idle this tick.  Groups start at one device each and the group
+    with the highest remaining demand/size ratio greedily doubles while
+    spare devices allow, so a lone huge wave grabs the whole mesh while
+    many small waves pack one device each (DESIGN.md section 14).
+    """
+    if n_devices < 1:
+        raise ValueError(f"plan_groups over {n_devices} devices")
+    if slots < 1:
+        raise ValueError(f"plan_groups with {slots} wave slots")
+    dem = [float(x) for x in demands]
+    if not dem:
+        raise ValueError("plan_groups with no demands")
+    if any(x < 0 for x in dem):
+        raise ValueError(f"negative demand in {demands}")
+    k = min(len(dem), n_devices)
+    if max_groups is not None:
+        if max_groups < 1:
+            raise ValueError(f"max_groups {max_groups} < 1")
+        k = min(k, max_groups)
+    dem = sorted(dem, reverse=True)[:k]
+    sizes = [1] * k
+    spare = n_devices - k
+    while spare > 0:
+        best, best_ratio = -1, -1.0
+        for i in range(k):
+            doubled = sizes[i] * 2
+            if sizes[i] > spare:           # doubling adds sizes[i] devices
+                continue
+            if doubled > slots or slots % doubled:
+                continue                   # group must divide the slots
+            ratio = dem[i] / sizes[i]
+            if ratio > best_ratio:
+                best, best_ratio = i, ratio
+        if best < 0:
+            break
+        spare -= sizes[best]
+        sizes[best] *= 2
+    # greedy-by-ratio keeps sizes descending alongside the sorted demands
+    # (equal sizes tie-break toward the larger demand), so the pairing
+    # "i-th largest demand <-> i-th entry" holds without re-sorting
+    return sizes + [1] * spare
 
 
 @dataclasses.dataclass
@@ -93,6 +152,8 @@ class WaveLog:
     cut_at: float                   # clock time the cut decision was made
     wall: float                     # dispatch wall seconds (engine-measured)
     lane: int = 0                   # dispatch lane the wave was pulled by
+    group_size: int = 1             # device-group width the wave ran on
+    #                                 (resize mode; 1-lane/unsharded = 1)
 
 
 class _EwmaWall:
@@ -133,7 +194,8 @@ class ContinuousGraphServer:
     * results are bitwise-identical to ``engine.run_naive`` on the same
       requests -- arrival order, deadlines, and clock behavior select wave
       composition, never numerics -- and ``engine.executor.trace_count``
-      still grows by at most one per shape bucket;
+      still grows by at most one per shape bucket (per (bucket, group
+      size) under ``resize=True``: equal-size groups share one program);
     * within one :meth:`poll` tick, cut waves dispatch in LPT order over
       the per-bucket EWMA wall estimates (urgent deadline/age cuts first),
       each pulled by the earliest-idle of the ``n_lanes`` dispatch lanes
@@ -146,6 +208,17 @@ class ContinuousGraphServer:
     ``slack_margin`` scales the wait bound in the slack comparison (>1
     cuts earlier; the default 1.5 buys headroom against wall variance and
     the host-side padding cost the device wall doesn't see).
+
+    ``resize=True`` (requires an engine mesh) switches the lanes from
+    slot-ranges of one shared mesh to DISJOINT device groups, replanned
+    between waves from queue composition by :func:`plan_groups`: a huge
+    wave grabs a wide group while small waves pack one device each, each
+    wave dispatching via ``begin_wave(submesh=...)`` on its group's
+    devices only (DESIGN.md section 14).  EWMA walls are additionally
+    tracked per group SIZE (:meth:`group_estimate`), the deadline-slack
+    wait bound becomes the heterogeneous-capacity LPT makespan over the
+    planned groups, and ``n_lanes=1`` always plans the single full-mesh
+    group -- shared-mesh single-lane semantics, exactly.
     """
 
     def __init__(self, engine: GraphServeEngine, *,
@@ -155,9 +228,13 @@ class ContinuousGraphServer:
                  slack_margin: float = 1.5,
                  batch_patience: float = 1.0,
                  max_wait: float = 0.25,
-                 n_lanes: Optional[int] = None):
+                 n_lanes: Optional[int] = None,
+                 resize: bool = False):
         if not 0.0 < ewma_alpha <= 1.0:
             raise ValueError(f"ewma_alpha {ewma_alpha} not in (0, 1]")
+        if resize and engine.mesh is None:
+            raise ValueError(
+                "resize=True needs an engine with a cores mesh to partition")
         self.engine = engine
         self.clock = clock
         self.ewma_alpha = ewma_alpha
@@ -174,10 +251,31 @@ class ContinuousGraphServer:
         if n_lanes < 1:
             raise ValueError(f"n_lanes {n_lanes} < 1")
         self.n_lanes = n_lanes
+        # resize mode: between waves, partition the engine's mesh into
+        # DISJOINT per-lane device groups sized from queue composition
+        # (``plan_groups``) and dispatch each wave on its own group via
+        # ``begin_wave(submesh=...)`` -- lanes stop contending on one
+        # shared device set (DESIGN.md section 14).  ``n_lanes`` caps the
+        # concurrent group count; with ``n_lanes=1`` the plan is always
+        # the single full-mesh group, reproducing the shared-mesh
+        # single-lane semantics exactly.
+        self._resize = bool(resize)
+        self.n_devices = engine.lanes
+        # per-group-SIZE EWMA walls (the heterogeneous-capacity floor in
+        # ``wait_bound``); seeded from the engine's recorded group_walls.
+        self._group_ewma: Dict[int, _EwmaWall] = {}
+        self.last_group_sizes: List[int] = []
         self._queues: Dict[int, List[QueuedRequest]] = {}
         self._ewma: Dict[int, _EwmaWall] = {}
         # per-lane EWMA of the wave walls that lane pulled (observability +
         # the lane-balance tests); cold-started like a never-run bucket.
+        # The cold start deliberately stays pessimistic: never-pulled
+        # lanes keep the shared-mesh wait bound high, cutting waves small
+        # and early -- which measures FASTER than fuller waves on the
+        # shared device set (overlapped full-mesh programs contend; see
+        # the recorded multidevice_rows).  Resize mode never reads these:
+        # its bound floors on the per-SIZE group walls instead, which are
+        # seeded from measured steady-state dispatches.
         self._lane_ewma: List[_EwmaWall] = [
             _EwmaWall(ewma_alpha, None, cold_start_wall)
             for _ in range(n_lanes)]
@@ -247,14 +345,33 @@ class ContinuousGraphServer:
         the walls of the waves that lane has pulled so far."""
         return self._lane_ewma[lane].value
 
+    def group_estimate(self, size: int) -> float:
+        """Current EWMA wave-wall estimate (seconds) for waves dispatched
+        on a ``size``-device group (resize mode observability)."""
+        return self._size_wall(size).value
+
+    def _size_wall(self, size: int) -> _EwmaWall:
+        est = self._group_ewma.get(size)
+        if est is None:
+            own = self.engine.group_walls.get(size)
+            seed = float(np.min(own)) if own else None
+            est = _EwmaWall(self.ewma_alpha, seed, self.cold_start_wall)
+            self._group_ewma[size] = est
+        return est
+
     @property
     def pipeline_depth(self) -> int:
-        """Waves actually kept in flight at once: capped at two whatever
-        the lane count -- depth 2 already hides all host prep behind
-        device compute, and deeper queues only pile programs onto the
-        shared device set (lanes are device groups of ONE mesh, not
-        disjoint hardware).  ``wait_bound`` packs over this same depth so
-        the slack model matches what ``_dispatch`` really does."""
+        """Waves actually kept in flight at once.  Shared-mesh lanes cap
+        at two whatever the lane count -- depth 2 already hides all host
+        prep behind device compute, and deeper queues only pile programs
+        onto the shared device set (lanes are device groups of ONE mesh,
+        not disjoint hardware).  Resize mode lifts the cap to ``n_lanes``:
+        disjoint groups ARE separate hardware, and ``_dispatch`` keeps at
+        most one wave in flight per group anyway.  ``wait_bound`` packs
+        over this same depth so the slack model matches what
+        ``_dispatch`` really does."""
+        if self._resize:
+            return self.n_lanes
         return min(self.n_lanes, 2)
 
     # -- wave cutting -------------------------------------------------------
@@ -274,7 +391,30 @@ class ContinuousGraphServer:
         shared device set they inflate and the bound converges back
         toward the serial sum; with no contention they stay at the device
         wall and the bound tightens honestly.
+
+        Resize mode: the same waves are packed longest-first over the
+        device groups ``plan_groups`` would cut for them right now --
+        heterogeneous lane capacities, each wave costed at no less than
+        its group's per-SIZE EWMA wall.  A single-group plan (``n_lanes=1``
+        full mesh) degenerates to the plain serial sum, exactly the
+        shared-mesh single-lane bound.
         """
+        if self._resize:
+            costs = [self.estimate(bucket)]
+            for b, q in self._queues.items():
+                if b != bucket and q:
+                    costs.append(self.estimate(b))
+            k = min(len(costs), self.n_devices, self.n_lanes)
+            if k == 1:
+                return sum(costs) * self.slack_margin
+            sizes = plan_groups(self.n_devices,
+                                sorted(costs, reverse=True),
+                                self.engine.slots, max_groups=self.n_lanes)
+            finish = [0.0] * k
+            for c in sorted(costs, reverse=True):
+                g = min(range(k), key=lambda j: (finish[j], j))
+                finish[g] += max(c, self._size_wall(sizes[g]).value)
+            return max(finish) * self.slack_margin
         if self.n_lanes == 1:
             bound = self.estimate(bucket)
             for b, q in self._queues.items():
@@ -389,7 +529,12 @@ class ContinuousGraphServer:
         both the bucket EWMA and the pulling lane's EWMA (the contention
         signal ``wait_bound`` reads).  With one lane this degenerates to
         the serial launch-then-finish loop.
+
+        Resize mode routes to :meth:`_dispatch_groups` instead: lanes
+        become disjoint device groups replanned per tick.
         """
+        if self._resize:
+            return self._dispatch_groups(ready)
         # start from any results stranded by a previously failed tick;
         # harvest appends into this same list, so even if THIS tick fails
         # mid-dispatch, everything harvested stays in _undelivered and the
@@ -409,7 +554,8 @@ class ContinuousGraphServer:
             self._ewma_for(handle.bucket).observe(wall)
             self._lane_ewma[lane].observe(wall)
             self.dispatch_log.append(WaveLog(
-                handle.bucket, len(wave), reason, cut_at, wall, lane))
+                handle.bucket, len(wave), reason, cut_at, wall, lane,
+                group_size=handle.pending.lanes))
             self.dispatched += len(wave)
             for entry, res in zip(wave, wave_results):
                 res.deadline = entry.deadline
@@ -444,6 +590,82 @@ class ContinuousGraphServer:
         self._undelivered = []
         return results
 
+    def _dispatch_groups(self, ready: List[tuple]) -> List[GraphResult]:
+        """Resize-mode dispatch: disjoint per-lane device groups, replanned
+        between waves from queue composition (DESIGN.md section 14).
+
+        The tick's cut waves are costed by their bucket EWMA estimates and
+        handed to ``plan_groups``: the i-th largest wave is paired with the
+        i-th widest group (a huge-graph wave grabs the wide group while
+        small waves pack one device each), overflow waves go to the
+        earliest-finishing group (heterogeneous LPT -- the same packing
+        ``wait_bound`` models).  Every wave launches via
+        ``begin_wave(submesh=...)`` on its group's devices ONLY, so groups
+        execute in genuine parallel; at most one wave is in flight per
+        group (a group's next wave first harvests its previous one).
+        Measured walls feed the bucket EWMA and the group-SIZE EWMA
+        (``group_estimate``); ``dispatch_log`` records the pulling group
+        index and its width, ``last_group_sizes`` the tick's plan.
+        """
+        results = self._undelivered
+        packed = self._pack_order(ready)
+        if not packed:
+            self._undelivered = []
+            return results
+        ests = [self.estimate(bucket) for bucket, _, _, _ in packed]
+        sizes = plan_groups(self.n_devices, sorted(ests, reverse=True),
+                            self.engine.slots, max_groups=self.n_lanes)
+        groups = dist_sharding.partition_mesh(self.engine.mesh, sizes)
+        self.last_group_sizes = list(sizes)
+        k = min(len(packed), self.n_devices, self.n_lanes)
+        # wave -> group: demand-descending waves greedily take the
+        # earliest-finishing of the k demand-assigned groups (ties toward
+        # the wider group -- plan_groups sizes are descending), so the
+        # first k waves get distinct groups largest<->largest and overflow
+        # piles LPT-style onto whichever group frees up first
+        group_busy = [0.0] * k
+        assign: Dict[int, int] = {}
+        order = sorted(range(len(packed)), key=lambda i: (-ests[i], i))
+        for i in order:
+            g = min(range(k), key=lambda j: (group_busy[j], j))
+            group_busy[g] += max(ests[i], self._size_wall(sizes[g]).value)
+            assign[i] = g
+        in_flight: Dict[int, tuple] = {}    # group -> (wave-entries,
+        #                                      reason, cut_at, InFlightWave)
+
+        def harvest(g: int) -> None:
+            wave, reason, cut_at, handle = in_flight.pop(g)
+            wave_results = self.engine.finish_wave(handle)
+            done_at = self.clock()
+            wall = self.engine.bucket_walls[handle.bucket][-1]
+            self._ewma_for(handle.bucket).observe(wall)
+            self._size_wall(handle.pending.lanes).observe(wall)
+            self.dispatch_log.append(WaveLog(
+                handle.bucket, len(wave), reason, cut_at, wall, g,
+                group_size=handle.pending.lanes))
+            self.dispatched += len(wave)
+            for entry, res in zip(wave, wave_results):
+                res.deadline = entry.deadline
+                res.completed_at = done_at
+                results.append(res)
+
+        try:
+            for i, (bucket, wave, reason, cut_at) in enumerate(packed):
+                g = assign[i]
+                if g in in_flight:          # one wave per group at a time
+                    harvest(g)
+                handle = self.engine.begin_wave(
+                    bucket, [e.request for e in wave], submesh=groups[g])
+                in_flight[g] = (wave, reason, cut_at, handle)
+        finally:
+            # mirror _dispatch: a begin_wave failure must not abandon
+            # in-flight waves -- harvest them all so results stream (via
+            # _undelivered if the exception propagates)
+            while in_flight:
+                harvest(min(in_flight))
+        self._undelivered = []
+        return results
+
     # -- warmup -------------------------------------------------------------
     def warmup(self, sizes: Sequence[int]) -> None:
         """Pre-compile + pre-trace the buckets for ``sizes`` vertex counts
@@ -451,13 +673,41 @@ class ContinuousGraphServer:
         first real request doesn't eat compile/trace time -- and so the
         EWMA seeds from a measured steady-state wall (the second dispatch;
         ``_ewma_for``'s min-seed ignores the first wave's trace outlier).
+
+        Resize mode additionally warms every device-group PLACEMENT the
+        plan can reach for those buckets: XLA compiles one executable per
+        placement (the abstract-mesh trace is shared across equal-size
+        groups, the binary is not), and the double dispatch keeps the
+        ``group_walls`` min -- the per-size EWMA seed behind
+        :meth:`group_estimate` and the resize ``wait_bound`` -- at the
+        steady-state wall instead of the compile outlier.
         """
-        for n in sorted({self.engine.bucket_for(int(n)) for n in sizes}):
+        req = GraphRequest(np.eye(2, dtype=np.float32),
+                           np.zeros((2, self.engine.f_in), np.float32),
+                           request_id=-1)
+        buckets = sorted({self.engine.bucket_for(int(n)) for n in sizes})
+        for n in buckets:
             if n in self.engine.bucket_walls:
                 continue
-            req = GraphRequest(np.eye(2, dtype=np.float32),
-                               np.zeros((2, self.engine.f_in), np.float32),
-                               request_id=-1)
             self.engine.dispatch_wave(n, [req])
             # a second dispatch records the steady-state (traced) wall
             self.engine.dispatch_wave(n, [req])
+        if not self._resize:
+            return
+        # placement warm covers ALL requested buckets, not just fresh ones:
+        # an engine warmed by plain serve() has bucket walls but no submesh
+        # executables, and re-warming a compiled placement is just two
+        # cheap cache-hit dispatches
+        size = 1
+        while size <= self.n_devices:
+            if self.engine.slots % size == 0:
+                n_groups = self.n_devices // size
+                part = ([size] * n_groups
+                        + [1] * (self.n_devices - size * n_groups))
+                subs = dist_sharding.partition_mesh(self.engine.mesh, part)
+                for sub in subs[:n_groups]:
+                    for n in buckets:
+                        for _ in range(2):
+                            self.engine.finish_wave(self.engine.begin_wave(
+                                n, [req], submesh=sub))
+            size *= 2

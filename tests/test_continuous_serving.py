@@ -10,13 +10,28 @@ Two halves (DESIGN.md §11):
   injected clock jitter: continuous results must be bitwise-identical to
   ``GraphServeEngine.run_naive`` on the same requests, with still at most
   one jit trace per shape bucket.
+* resize-policy tests -- with ``resize=True`` the server partitions its
+  engine's mesh into disjoint per-lane device groups between waves
+  (DESIGN.md §14): the fake clock pins that a large-graph wave is granted
+  the wide group while small waves pack the 1-device groups, that
+  ``n_lanes=1`` (always the single full-mesh group) reproduces the
+  shared-mesh single-lane semantics exactly, and that starvation-freedom
+  survives resizing.  Multi-group scenarios need the 8-device CI tier;
+  the 1-device-mesh equivalence pin runs everywhere.
 """
+import jax
 import numpy as np
 import pytest
 
+from repro.distributed import sharding
 from repro.serving.graph_engine import (GraphRequest, GraphServeEngine,
                                         random_requests)
 from repro.serving.scheduler import ContinuousGraphServer
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (CI multidevice tier sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
 F_IN, HIDDEN, CLASSES = 32, 8, 6
 
@@ -259,6 +274,28 @@ def test_warmup_traces_buckets_before_traffic():
     assert eng.executor.trace_count == traces0     # no new traces
 
 
+def test_resize_warmup_covers_group_placements():
+    """Resize-mode warmup pre-dispatches every reachable device-group
+    placement (XLA compiles per placement even though equal-size groups
+    share one trace), TWICE each so the recorded ``group_walls`` min --
+    the per-size EWMA seed -- is a steady-state wall, not the compile
+    outlier.  It also covers buckets the engine has already served."""
+    clk = FakeClock()
+    eng = _engine(slots=2, mesh=sharding.cores_mesh(1))
+    eng.dispatch_wave(32, _reqs(1, seed=3, sizes=(24,)))  # pre-served
+    srv = _server(eng, clk, resize=True)
+    srv.warmup((24, 60))
+    assert eng.buckets == [32, 64]
+    # 1-device mesh: every wave is a size-1 group -- 1 pre-serve + 2
+    # fresh-bucket warm dispatches + the placement warm's 2 per bucket
+    # (the pre-served bucket 32 is placement-warmed too)
+    assert len(eng.group_walls[1]) == 7
+    traces0 = eng.executor.trace_count
+    srv.submit(_reqs(1, seed=4, sizes=(24,))[0], deadline=clk.t + 1e9)
+    srv.drain()
+    assert eng.executor.trace_count == traces0     # no new traces
+
+
 def test_submit_validates_at_the_edge():
     srv = _server(_engine(), FakeClock())
     bad = GraphRequest(np.full((4, 4), np.nan, np.float32),
@@ -266,6 +303,127 @@ def test_submit_validates_at_the_edge():
     with pytest.raises(ValueError, match="non-finite"):
         srv.submit(bad)
     assert srv.pending == 0
+
+
+# -- resize policy (disjoint device groups, DESIGN.md section 14) -----------
+
+def test_resize_requires_mesh():
+    with pytest.raises(ValueError, match="mesh"):
+        ContinuousGraphServer(_engine(), resize=True)
+
+
+def test_resize_one_device_mesh_matches_unsharded():
+    """The degenerate full-mesh group on ONE device: a resize server's
+    policy decisions and results are identical to the plain unsharded
+    single-lane server -- same wave composition, same cut reasons, same
+    wait bound, bitwise-equal logits."""
+    clk_a, clk_b = FakeClock(), FakeClock()
+    plain = _server(_engine(slots=3), clk_a, max_wait=1.0)
+    resized = _server(_engine(slots=3, mesh=sharding.cores_mesh(1)), clk_b,
+                      max_wait=1.0, resize=True)
+    assert resized.n_lanes == 1
+    reqs = _reqs(7, seed=12)
+    done_a, done_b = [], []
+    for r in reqs:
+        plain.submit(r)
+        resized.submit(r)
+        clk_a.advance(0.4), clk_b.advance(0.4)
+        done_a += plain.poll()
+        done_b += resized.poll()
+    done_a += plain.drain()
+    done_b += resized.drain()
+    assert [(w.bucket, w.n_real, w.reason) for w in plain.dispatch_log] == \
+           [(w.bucket, w.n_real, w.reason) for w in resized.dispatch_log]
+    assert all(w.group_size == 1 for w in resized.dispatch_log)
+    for a, b in zip(done_a, done_b):
+        assert a.request_id == b.request_id
+        np.testing.assert_array_equal(a.logits, b.logits)
+    # primed to the same estimates, the wait bounds agree exactly (the
+    # single-group plan degenerates to the PR-5 serial-sum bound)
+    for srv in (plain, resized):
+        srv._ewma_for(32).value = 0.02
+        srv._ewma_for(64).value = 0.07
+        srv._queues.setdefault(32, []).append(object())
+    assert resized.wait_bound(64) == pytest.approx(plain.wait_bound(64))
+
+
+@multidevice
+def test_resize_wide_group_for_large_wave():
+    """One tick, five waves of very different estimated walls: the policy
+    grants the heavy bucket the 4-device group and packs every light wave
+    onto its own single device ([4, 1, 1, 1, 1] on 8 devices)."""
+    clk = FakeClock()
+    eng = GraphServeEngine("gcn", f_in=F_IN, hidden=4, n_classes=CLASSES,
+                           slots=8, min_bucket=8,
+                           mesh=sharding.cores_mesh(8))
+    srv = _server(eng, clk, max_wait=1.0, resize=True)
+    # five buckets: 8/16/32/64 light, 128 heavy (primed estimates drive
+    # the plan; the fake clock never runs long enough to move them much)
+    for n in (6, 12, 24, 48, 96):
+        srv.submit(random_requests(1, f_in=F_IN, sizes=(n,), seed=n)[0])
+    for b in (8, 16, 32, 64):
+        srv._ewma_for(b).value = 0.01
+    srv._ewma_for(128).value = 10.0
+    clk.advance(2.0)                           # age-cut all five buckets
+    done = srv.poll()
+    assert len(done) == 5 and srv.pending == 0
+    assert srv.last_group_sizes == [4, 1, 1, 1, 1]
+    width = {w.bucket: w.group_size for w in srv.dispatch_log}
+    assert width[128] == 4
+    assert all(width[b] == 1 for b in (8, 16, 32, 64))
+
+
+@multidevice
+def test_resize_single_lane_full_mesh_matches_shared_mesh():
+    """``n_lanes=1`` under resize always plans the single full-mesh group:
+    policy decisions, group width (all 8 devices), and logits match the
+    PR-5 shared-mesh single-lane server exactly."""
+    clk_a, clk_b = FakeClock(), FakeClock()
+    mesh = sharding.cores_mesh(8)
+    shared = _server(_engine(slots=8, mesh=mesh), clk_a, max_wait=1.0,
+                     n_lanes=1)
+    resized = _server(_engine(slots=8, mesh=mesh), clk_b, max_wait=1.0,
+                      n_lanes=1, resize=True)
+    reqs = _reqs(11, seed=13)
+    done_a, done_b = [], []
+    for r in reqs:
+        shared.submit(r)
+        resized.submit(r)
+        clk_a.advance(0.3), clk_b.advance(0.3)
+        done_a += shared.poll()
+        done_b += resized.poll()
+    done_a += shared.drain()
+    done_b += resized.drain()
+    assert [(w.bucket, w.n_real, w.reason) for w in shared.dispatch_log] == \
+           [(w.bucket, w.n_real, w.reason) for w in resized.dispatch_log]
+    assert all(w.group_size == 8 for w in resized.dispatch_log)
+    assert resized.last_group_sizes == [8]
+    for a, b in zip(done_a, done_b):
+        assert a.request_id == b.request_id
+        np.testing.assert_array_equal(a.logits, b.logits)
+
+
+@multidevice
+def test_resize_starvation_freedom():
+    """Starvation-freedom survives resizing: a poll-only schedule (no
+    drain) over a mixed deadline/deadline-less stream dispatches every
+    submission once the clock moves past max_wait, groups replanned every
+    tick."""
+    clk = FakeClock()
+    eng = _engine(slots=8, mesh=sharding.cores_mesh(8))
+    srv = _server(eng, clk, max_wait=1.0, resize=True)
+    reqs = _reqs(10, seed=14, sizes=(24, 60, 100))
+    for i, r in enumerate(reqs):
+        srv.submit(r, deadline=clk.t + 1e6 if i % 2 else None)
+        srv.poll()
+    for _ in range(10):
+        clk.advance(0.6)
+        srv.poll()
+        if srv.pending == 0:
+            break
+    assert srv.pending == 0
+    assert srv.dispatched == len(reqs)
+    assert all(w.group_size >= 1 for w in srv.dispatch_log)
 
 
 # -- bitwise-parity fuzz ----------------------------------------------------

@@ -97,6 +97,40 @@ def test_transform_cost_tips_decision():
     assert _plan(0.002, slow)[1] == int(Format.DENSE)
 
 
+def test_transform_cost_scales_with_rmax():
+    """Regression: ``transform_seconds`` must charge the ELL WRITE side by
+    the ``rmax`` row budget (cols int32 + vals), not a dense (m, n)
+    compacted buffer -- ``dense_to_ell`` never materialises one.  The cost
+    is monotone in rmax and matches the read+write byte accounting."""
+    m = TPUCostModel()
+    walls = [float(m.transform_seconds(M, K, r)) for r in (16, 64, 512)]
+    assert walls == sorted(walls) and walls[0] < walls[-1]
+    want = ((M * K * m.dtype_bytes + M * RMAX * (4 + m.dtype_bytes))
+            / (m.spec.hbm_bandwidth * m.eff_transform)
+            + m.transform_overhead_s)
+    assert float(m.transform_seconds(M, K, RMAX)) == pytest.approx(want)
+
+
+@pytest.mark.parametrize("block_rows,want_fmt", [
+    # the corrected tip-over: CSR amortizes once >= 6 of the 64 lhs
+    # block-rows are occupied.  The old rmax-blind transform (a full
+    # 2*m*n byte charge) put the tip-over at 11 block-rows, overpricing
+    # the row path by the phantom (m, n) write
+    (5, int(Format.DENSE)),
+    (6, int(Format.CSR)),
+    # 8 block-rows: DENSE under the old accounting -- the regression pin
+    (8, int(Format.CSR)),
+])
+def test_rmax_aware_transform_tip_over(block_rows, want_fmt):
+    dx = np.zeros(GRID, np.float32)
+    dx[:block_rows, :] = 0.002
+    dy = jnp.ones((GRID[1], RHS_COLS // 16), jnp.float32)
+    fmt = analyzer.plan_format("dynamic", jnp.asarray(dx), dy, (M, K),
+                               RHS_COLS, BLOCK, TPUCostModel(),
+                               kernel_type=KernelType.AGGREGATE, rmax=RMAX)
+    assert int(fmt) == want_fmt
+
+
 def test_fill_guard_vetoes_csr():
     """At 5% density the time comparison still favors CSR (dropping the
     slack proves it) -- only the rmax fill guard keeps the block path."""

@@ -59,11 +59,15 @@ PUBLIC = [
     # the continuous-serving surface (DESIGN 11 / README "Continuous
     # serving")
     ("repro.serving.scheduler", ["ContinuousGraphServer", "QueuedRequest",
-                                 "WaveLog"]),
+                                 "WaveLog", "plan_groups"]),
     # the sharded-dispatch surface (DESIGN 12 / README "Sharding waves
     # over a device mesh")
     ("repro.distributed.sharding", ["cores_mesh", "wave_spec",
-                                    "wave_shardings", "CORES_AXIS"]),
+                                    "wave_shardings", "CORES_AXIS",
+                                    # disjoint submesh layer (DESIGN 14 /
+                                    # README "Disjoint lane submeshes")
+                                    "partition_mesh", "partition_devices",
+                                    "abstract_cores_mesh"]),
     ("repro.core.scheduler", ["schedule_lpt", "assign_bins",
                               "steal_rebalance"]),
     ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS",
@@ -80,7 +84,8 @@ PUBLIC_ATTRS = [
      ["serve", "run_naive", "bucket_for", "cut_wave", "dispatch_wave",
       "begin_wave", "finish_wave", "request_cost"]),
     ("repro.serving.scheduler", "ContinuousGraphServer",
-     ["submit", "poll", "drain", "warmup", "wait_bound", "lane_estimate"]),
+     ["submit", "poll", "drain", "warmup", "wait_bound", "lane_estimate",
+      "group_estimate"]),
 ]
 
 
