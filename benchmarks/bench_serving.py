@@ -49,9 +49,22 @@ shared-mesh lane speedup so submesh-vs-shared reads from one artifact
 (smoke artifact ``BENCH_serving.submesh.smoke.json``, full runs merge
 ``submesh_rows`` into ``BENCH_serving.json``).
 
+``--overload`` is the overload-control ladder (DESIGN.md section 15):
+Poisson replays at 1x/3x/10x the measured capacity (1x/3x under
+``--smoke``) with per-WAVE-scale deadlines, once through the no-shedding
+baseline and once through ``shed="predicted-miss"`` admission control
+(plus pressure degradation).  Gates: no replay ever drops a result
+(delivered + shed == submitted), the shedding policy's ADMITTED deadline
+hit-rate stays >= ``--overload-hit-floor`` at loads >= 3x, and (full
+runs) the baseline's overall hit-rate collapses below
+``--overload-baseline-max`` at 10x -- overload is real, admission control
+is what survives it.  Smoke writes ``BENCH_serving.overload.smoke.json``;
+full runs merge ``overload_rows`` into ``BENCH_serving.json``.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke              # CI gate
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke --continuous # + online gate
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke --overload   # + overload gate
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m benchmarks.bench_serving --mesh --smoke   # + mesh gate
 """
@@ -75,6 +88,7 @@ _SMOKE_OUT = _OUT.with_name("BENCH_serving.smoke.json")
 _CONT_SMOKE_OUT = _OUT.with_name("BENCH_serving.continuous.smoke.json")
 _MESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.multidevice.smoke.json")
 _SUBMESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.submesh.smoke.json")
+_OVERLOAD_SMOKE_OUT = _OUT.with_name("BENCH_serving.overload.smoke.json")
 
 F_IN = 64
 SIZES = (56, 100, 150)            # -> buckets 64, 128, 256
@@ -604,6 +618,217 @@ def run_submesh(*, smoke: bool = False, fast: bool = True, load: float = 2.0,
     return rows
 
 
+def _replay_overload(eng: GraphServeEngine, reqs, arrivals, budget: float,
+                     shed: str, pressure_threshold: float = float("inf")):
+    """Arrival replay under an overload-control policy (DESIGN.md §15).
+
+    Like ``_replay_continuous``, but the scheduler runs with admission
+    shedding: a ticket whose ``admitted`` is False will never produce a
+    result, so completion means delivered + shed == submitted (asserted
+    -- the zero-results-dropped gate).  Requests alternate classes (every
+    4th is ``priority=1, tenant="gold"``) so the per-class counters and
+    wave compositions in the recorded rows carry real data.  Returns a
+    stats dict for one (policy, load) cell.
+    """
+    srv = ContinuousGraphServer(eng, shed=shed,
+                                pressure_threshold=pressure_threshold)
+    # steady-state warmup: a long-running server has dispatch history, so
+    # replay a couple of deadline-less waves before starting the clock.
+    # This warms the SERVER-level calibrations the admission model leans
+    # on -- wall-clock per wave (host prep included), occupancy, cost
+    # scale -- which no amount of engine warming can provide; a stone-cold
+    # server facing a 10x burst has no feedback yet and over-admits by
+    # construction (cold-start admission is pinned by the unit tests, not
+    # measured here).  Results are drained and discarded.
+    for r in random_requests(2 * eng.slots, f_in=F_IN, sizes=SIZES, seed=13):
+        srv.submit(r, tenant="warmup")
+    srv.drain()
+    srv.peak_pressure = 0.0                  # gauge the replay, not warmup
+    t0 = time.monotonic()
+    abs_arrival = t0 + np.asarray(arrivals)
+    n, i, done = len(reqs), 0, []
+    tickets = []
+    while i < n:
+        now = time.monotonic()
+        while i < n and abs_arrival[i] <= now:
+            gold = i % 4 == 0
+            tickets.append(srv.submit(
+                reqs[i], deadline=float(abs_arrival[i]) + budget,
+                priority=1 if gold else 0,
+                tenant="gold" if gold else "std"))
+            i += 1
+        got = srv.poll()
+        done += got
+        if not got:
+            time.sleep(min(max(abs_arrival[i] - time.monotonic(), 0.0),
+                           1e-3) if not srv.pending else 5e-4)
+    done += srv.drain()
+    # zero-results-dropped: every submitted request either produced exactly
+    # one result or is accounted in the shed log -- never silently lost
+    delivered_ids = sorted(r.request_id for r in done)
+    assert len(delivered_ids) == len(set(delivered_ids)), "duplicate results"
+    # ticket seq -> request via the submit-order zip (warmup submissions
+    # offset the raw seq, so it is NOT an index into ``reqs``)
+    req_of = {int(t): r for t, r in zip(tickets, reqs)}
+    shed_ids = sorted(req_of[int(t)].request_id for t in srv.shed_log)
+    assert sorted(delivered_ids + shed_ids) == sorted(
+        r.request_id for r in reqs), (
+        f"results dropped: {len(done)} delivered + {len(shed_ids)} shed "
+        f"!= {n} submitted")
+    by_arrival = {r.request_id: a for r, a in zip(reqs, abs_arrival)}
+    lat = [r.completed_at - by_arrival[r.request_id] for r in done]
+    met = sum(bool(r.deadline_met) for r in done)
+    span = (max(r.completed_at for r in done) - t0) if done else 0.0
+    return {
+        "submitted": n,
+        "delivered": len(done),
+        "shed": len(shed_ids),
+        "shed_at_submit": srv.shed_at_submit,
+        "shed_under_pressure": srv.shed_under_pressure,
+        "met": met,
+        "missed": len(done) - met,
+        # overall: met deadlines over EVERYTHING submitted (a shed request
+        # is a miss from the client's view); admitted: over deliveries only
+        "overall_hit_rate": met / n,
+        "admitted_hit_rate": (met / len(done)) if done else 1.0,
+        "goodput_rps": (met / span) if span else 0.0,
+        "p99_sojourn_ms": (float(np.percentile(lat, 99) * 1e3)
+                           if lat else 0.0),
+        "peak_pressure_s": srv.peak_pressure,
+        "at_risk_admitted": sum(t.verdict == "admit-at-risk"
+                                for t in tickets),
+        "predicted_miss_rate": float(np.mean(
+            [t.predicted_miss for t in tickets])),
+        "class_stats": {
+            f"{tenant}/p{prio}": {
+                "admitted": s.admitted, "shed": s.shed,
+                "met": s.met, "missed": s.missed}
+            for (tenant, prio), s in sorted(srv.class_stats.items())},
+    }
+
+
+def _bench_overload(model: str, n_requests: int, loads, budget_factor: float
+                    ) -> list:
+    """Overload ladder for one model: Poisson replays at each load in
+    ``loads`` x the measured capacity, once WITHOUT shedding
+    (``shed="never"``: the pre-overload scheduler, every request admitted
+    and chased) and once WITH cost-model admission control
+    (``shed="predicted-miss"`` + pressure degradation at the deadline
+    budget).  The deadline budget is per-WAVE scale
+    (``budget_factor`` x the measured wave wall), not per-batch: at 1x
+    load either policy hits nearly everything, while past saturation the
+    no-shedding baseline's queue -- and so its sojourn -- grows without
+    bound and its hit-rate collapses; admission control sheds the
+    predicted losers at the door and keeps the ADMITTED hit-rate high.
+    That asymmetry is the acceptance gate (DESIGN.md §15).
+    """
+    reqs = random_requests(n_requests, f_in=F_IN, sizes=SIZES, seed=7)
+    eng = GraphServeEngine(model, f_in=F_IN, hidden=16, n_classes=7,
+                           slots=4, weight_seed=0)
+    eng.serve(reqs)                          # warm: compile + trace + walls
+    t0 = time.perf_counter()
+    eng.serve(reqs)
+    serve_wall = time.perf_counter() - t0
+    capacity = n_requests / serve_wall       # requests/s through full waves
+    wave_wall = serve_wall * eng.slots / n_requests
+    budget = budget_factor * wave_wall
+    rows = []
+    for load in loads:
+        rate = load * capacity
+        cell = {"mode": "overload", "model": model,
+                "n_requests": n_requests, "slots": eng.slots,
+                "load": load, "budget_ms": budget * 1e3,
+                "capacity_rps": capacity, "arrival_rate_rps": rate,
+                "policies": {}}
+        for shed in ("never", "predicted-miss"):
+            rng = np.random.default_rng(100)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+            # degradation arms at HALF the budget: by the time the backlog
+            # bound reaches the full deadline budget every queued request
+            # is already doomed -- pruning has to start while shedding can
+            # still rescue the survivors' slack
+            cell["policies"][shed] = _replay_overload(
+                eng, reqs, arrivals, budget, shed,
+                pressure_threshold=(budget / 2 if shed == "predicted-miss"
+                                    else float("inf")))
+        base = cell["policies"]["never"]
+        ctrl = cell["policies"]["predicted-miss"]
+        emit(f"serving.overload.{model}.x{load:g}",
+             ctrl["p99_sojourn_ms"] * 1e3,
+             f"baseline_hit={base['overall_hit_rate']:.2f} "
+             f"admitted_hit={ctrl['admitted_hit_rate']:.2f} "
+             f"shed={ctrl['shed']}/{n_requests} "
+             f"goodput={ctrl['goodput_rps']:.1f}rps "
+             f"(baseline {base['goodput_rps']:.1f}rps)")
+        rows.append(cell)
+    return rows
+
+
+def run_overload(*, smoke: bool = False, fast: bool = True,
+                 budget_factor: float = 6.0, hit_floor: float = 0.9,
+                 baseline_max: float = 0.5,
+                 write_json: bool = True) -> list:
+    """Overload-control ladder (``--overload``): admission shedding vs the
+    no-shedding baseline at 1x/3x/10x the measured capacity.
+
+    Gates: zero results dropped in every replay (asserted inside
+    ``_replay_overload``); at every load >= 3x the shedding policy's
+    ADMITTED deadline hit-rate >= ``hit_floor``; and at the 10x point the
+    no-shedding baseline's overall hit-rate < ``baseline_max`` -- i.e.
+    the replay genuinely overloads the engine and admission control is
+    what keeps served requests on deadline.  Smoke (the serving CI job)
+    runs gcn only at 1x/3x and skips the baseline-collapse gate (shared
+    runners make the 10x point slow and noisy); full runs merge
+    ``overload_rows`` into ``BENCH_serving.json``."""
+    models, _, _ = _scale(smoke, fast)
+    loads = (1, 3) if smoke else (1, 3, 10)
+    # full runs use a DEEP replay (24 waves' worth): at 10x the whole
+    # backlog lands inside ~2.4 wave walls, so time-to-clear (~24 walls)
+    # dwarfs the 6-wall deadline budget and the no-shedding baseline
+    # collapses for real -- and the shedding policy still delivers enough
+    # requests at 10x that the hit-rate gate is not one borderline miss
+    # away from binomial noise
+    n_requests = 16 if smoke else 96
+    rows = []
+    for m in models:
+        rows.extend(_bench_overload(m, n_requests, loads, budget_factor))
+    payload = {
+        "bench": "overload-controlled serving: admission shedding vs "
+                 "no-shedding baseline",
+        "device": jax.default_backend(),
+        "loads": list(loads),
+        "hit_floor": hit_floor,
+        "baseline_max": baseline_max,
+        "rows": rows,
+    }
+    if smoke:
+        # CI diagnostic: written even on gate failure (see run_mesh)
+        _OVERLOAD_SMOKE_OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    weak = [(r["model"], r["load"],
+             round(r["policies"]["predicted-miss"]["admitted_hit_rate"], 3))
+            for r in rows if r["load"] >= 3
+            and r["policies"]["predicted-miss"]["admitted_hit_rate"]
+            < hit_floor]
+    if weak:
+        sys.exit(f"admitted deadline hit-rate below {hit_floor} under "
+                 f"overload: {weak}")
+    if not smoke:
+        soft = [(r["model"], round(r["policies"]["never"]["overall_hit_rate"],
+                                   3))
+                for r in rows if r["load"] >= 10
+                and r["policies"]["never"]["overall_hit_rate"]
+                >= baseline_max]
+        if soft:
+            sys.exit(f"no-shedding baseline did not collapse at 10x "
+                     f"(overall hit-rate >= {baseline_max}): {soft} -- "
+                     f"the replay is not actually overloading the engine")
+    if not smoke and write_json:
+        data = json.loads(_OUT.read_text()) if _OUT.exists() else {}
+        data["overload_rows"] = rows
+        _OUT.write_text(json.dumps(data, indent=2) + "\n")
+    return rows
+
+
 def _scale(smoke: bool, fast: bool) -> tuple:
     """(models, n_requests, rounds) for the sync AND continuous ladders --
     one source of truth so the smoke artifact's metadata can't drift from
@@ -707,6 +932,29 @@ if __name__ == "__main__":
                          "throughput; with --smoke writes "
                          "BENCH_serving.submesh.smoke.json, otherwise "
                          "merges submesh_rows into BENCH_serving.json")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload-control ladder: Poisson replays at "
+                         "1x/3x/10x the measured capacity (1x/3x with "
+                         "--smoke), shed='predicted-miss' admission "
+                         "control vs the no-shedding baseline, gating "
+                         "zero-results-dropped + the admitted hit-rate "
+                         "floor (+ the 10x baseline-collapse check on "
+                         "full runs); with --smoke writes "
+                         "BENCH_serving.overload.smoke.json, otherwise "
+                         "merges overload_rows into BENCH_serving.json")
+    ap.add_argument("--overload-hit-floor", type=float, default=0.9,
+                    help="overload gate: fail if the shedding policy's "
+                         "ADMITTED deadline hit-rate < floor at any "
+                         "load >= 3x capacity")
+    ap.add_argument("--overload-baseline-max", type=float, default=0.5,
+                    help="overload gate (full runs): fail unless the "
+                         "no-shedding baseline's overall hit-rate < max "
+                         "at 10x capacity (the replay must genuinely "
+                         "overload the engine)")
+    ap.add_argument("--overload-budget-factor", type=float, default=6.0,
+                    help="overload deadline budget as a multiple of the "
+                         "measured WAVE wall (per-wave scale, unlike "
+                         "--budget-factor's per-batch scale)")
     ap.add_argument("--lane-tol", type=float, default=1.0,
                     help="mesh gate: fail if multi-lane continuous "
                          "throughput < tol x single-lane on the same "
@@ -736,6 +984,17 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.submesh and not args.mesh:
         ap.error("--submesh extends the --mesh ladder; pass both")
+    if args.overload:
+        # --overload is its own ladder with its own gates; like --mesh it
+        # does not compose with the sync/continuous flags in one invocation
+        if args.mesh or args.continuous:
+            ap.error("--overload runs its own ladder; run --mesh/"
+                     "--continuous gates in their own invocations")
+        run_overload(smoke=args.smoke, fast=not args.full,
+                     budget_factor=args.overload_budget_factor,
+                     hit_floor=args.overload_hit_floor,
+                     baseline_max=args.overload_baseline_max)
+        sys.exit(0)
     if args.mesh:
         # --mesh is its own ladder with its own gates (--lane-tol); the
         # sync/continuous gate flags do not apply to it

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Union
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -271,6 +271,43 @@ class TPUCostModel:
         fits = nnz * self.csr_fill_slack <= rmax * m
         return jnp.where((csr_s < block_s) & fits,
                          Format.CSR, Format.DENSE).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class CostCalibration:
+    """EWMA calibration from Analyzer cost units to measured wall seconds.
+
+    The Table-IV models predict *relative* cost (cycles on the FPGA model,
+    idealized roofline seconds on the TPU model); dispatch walls on a real
+    host include trace/launch/padding overheads the models deliberately
+    ignore.  The serving admission controller (DESIGN.md section 15) needs
+    absolute seconds to compare a predicted completion against a deadline,
+    so it folds every observed ``(predicted cost, measured wall)`` pair
+    into an EWMA of seconds-per-cost-unit and converts per-request
+    Analyzer costs (``GraphServeEngine.request_cost``) through it.
+
+    ``seconds`` returns ``fallback`` until the first observation (cold
+    start belongs to the caller -- the scheduler already tracks per-bucket
+    EWMA walls for exactly that).  Zero-cost observations are skipped:
+    an all-SKIP wave's wall is launch overhead, not a unit rate.
+    """
+
+    alpha: float = 0.25
+    seconds_per_unit: Optional[float] = None
+
+    def observe(self, cost_units: float, wall_seconds: float) -> None:
+        if cost_units <= 0.0 or wall_seconds <= 0.0:
+            return
+        rate = float(wall_seconds) / float(cost_units)
+        if self.seconds_per_unit is None:
+            self.seconds_per_unit = rate
+        else:
+            self.seconds_per_unit += self.alpha * (rate - self.seconds_per_unit)
+
+    def seconds(self, cost_units: float, fallback: float = 0.0) -> float:
+        if self.seconds_per_unit is None:
+            return fallback
+        return float(cost_units) * self.seconds_per_unit
 
 
 def predict_output_density(a_x: ArrayLike, a_y: ArrayLike, n: ArrayLike) -> ArrayLike:

@@ -15,6 +15,10 @@ provide:
   improvement when all costs are known up front (the Analyzer predicts them),
   strictly dominating the on-line greedy queue.  Accepts an optional
   per-core ``capacity`` (max tasks per bin) for fixed-slot consumers.
+* ``schedule_weighted`` -- class-weighted LPT: tasks ordered by
+  ``weight * cost`` (weighted-fair dispatch for the overload-aware serving
+  scheduler, DESIGN.md section 15); all-equal weights reproduce
+  ``schedule_lpt`` exactly.
 * ``assign_bins``       -- the bin-ASSIGNMENT view of ``schedule_lpt``: a
   per-task core index array, the request->device map the sharded serving
   path consumes (each mesh device is a Computation Core, each wave slot a
@@ -95,6 +99,48 @@ def schedule_lpt(costs: Sequence[float], n_cores: int,
             heapq.heappush(heap, (avail + float(costs[t]), core))
     core_time = np.array([float(np.sum([costs[t] for t in a])) for a in assignment])
     return Schedule(assignment, core_time, float(core_time.max(initial=0.0)), "lpt")
+
+
+def schedule_weighted(costs: Sequence[float], weights: Sequence[float],
+                      n_cores: int,
+                      capacity: Optional[int] = None) -> Schedule:
+    """Class-weighted LPT: order tasks by descending ``weight * cost``.
+
+    The weighted-fair extension of :func:`schedule_lpt` the overload-aware
+    serving scheduler dispatches cut waves through (DESIGN.md section 15):
+    a wave's class weight scales its predicted cost in the launch-order
+    sort, so a high-priority wave launches ahead of an equal-cost
+    best-effort one while a sufficiently long low-priority wave still
+    launches early (weighted fairness, not strict priority).  With all
+    weights equal the order -- and hence the whole schedule -- is exactly
+    ``schedule_lpt``'s (both sorts are stable on the same key ordering),
+    so admitting priorities never perturbs the existing single-class
+    behavior.  ``core_time``/``makespan`` stay in UNWEIGHTED cost units:
+    weights shape the order, not the predicted walls.
+    """
+    costs = np.asarray(costs, dtype=float)
+    weights = np.asarray(weights, dtype=float)
+    if weights.shape != costs.shape:
+        raise ValueError(
+            f"{len(weights)} weights for {len(costs)} tasks")
+    if len(weights) and weights.min() <= 0.0:
+        raise ValueError(f"non-positive class weight in {weights}")
+    if capacity is not None and n_cores * capacity < len(costs):
+        raise ValueError(
+            f"{len(costs)} tasks exceed {n_cores} cores x {capacity} slots")
+    order = np.argsort(-(weights * costs), kind="stable")
+    heap: List[Tuple[float, int]] = [(0.0, c) for c in range(n_cores)]
+    heapq.heapify(heap)
+    assignment: List[List[int]] = [[] for _ in range(n_cores)]
+    for t in order:
+        avail, core = heapq.heappop(heap)
+        assignment[core].append(int(t))
+        if capacity is None or len(assignment[core]) < capacity:
+            heapq.heappush(heap, (avail + float(costs[t]), core))
+    core_time = np.array([float(np.sum([costs[t] for t in a]))
+                          for a in assignment])
+    return Schedule(assignment, core_time,
+                    float(core_time.max(initial=0.0)), "wlpt")
 
 
 def assign_bins(costs: Sequence[float], n_bins: int,

@@ -1,0 +1,227 @@
+"""Consolidated serving configuration (DESIGN.md section 15).
+
+The serving constructors had sprawled into free-form kwargs --
+:class:`~repro.serving.graph_engine.GraphServeEngine` grew to ~17 knobs,
+:class:`~repro.serving.scheduler.ContinuousGraphServer` to 8 more, and the
+overload-control work adds another half dozen.  The knobs now live in two
+frozen dataclasses:
+
+* :class:`EngineConfig`  -- everything ``GraphServeEngine`` is built from
+  (model spec, admission geometry, executor policy, mesh).
+* :class:`ServeConfig`   -- everything ``ContinuousGraphServer`` is built
+  from (EWMA/slack/cutting policy, lanes/resize, and the overload-control
+  policy: admission shedding, priority weighting, pressure degradation,
+  lane autoscaling).
+
+Both constructors accept ``config=`` while keeping every existing kwarg
+working, with one merge rule (``merge_config``):
+
+* kwargs explicitly passed at the call site override the matching config
+  field -- *unless* the config also sets that field away from its default
+  to a DIFFERENT value, which raises ``ValueError`` (a conflicting
+  duplicate: two sources disagree and neither obviously wins);
+* passing the same value both ways is a harmless duplicate;
+* with no ``config=``, kwargs build the config exactly as before.
+
+The resolved config is kept on the instance (``.config``), and
+``from_config`` round-trips: ``GraphServeEngine.from_config(eng.config)``
+builds an equivalent engine.  Validation lives on the config objects
+(``validate()``), so malformed knobs fail at construction whichever door
+they came in through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, Optional
+
+_UNSET = object()        # sentinel: "kwarg not passed at the call site"
+
+
+def merge_config(cls, config, kwargs: Dict[str, Any]):
+    """Resolve a config dataclass from ``config=`` plus call-site kwargs.
+
+    ``kwargs`` maps field name -> value-or-``UNSET`` (the constructor's
+    sentinel defaults); only explicitly passed kwargs participate.  Rules
+    (pinned in ``tests/test_serve_config.py``):
+
+    * no config: explicit kwargs over the dataclass defaults;
+    * config + kwarg on a field the config left at its default: the kwarg
+      overrides;
+    * config + kwarg agreeing on a value: fine (duplicate, not conflict);
+    * config + kwarg DISAGREEING on a field the config set away from its
+      default: ``ValueError`` -- the two sources conflict.
+    """
+    if config is not None and not isinstance(config, cls):
+        raise TypeError(
+            f"config must be {cls.__name__}, got {type(config).__name__}")
+    passed = {k: v for k, v in kwargs.items() if v is not _UNSET}
+    unknown = set(passed) - {f.name for f in dataclasses.fields(cls)}
+    if unknown:
+        raise TypeError(f"unknown {cls.__name__} fields: {sorted(unknown)}")
+    if config is None:
+        return cls(**passed)
+    defaults = {f.name: f.default for f in dataclasses.fields(cls)}
+    merged = {}
+    for name, value in passed.items():
+        cfg_value = getattr(config, name)
+        if not _same(cfg_value, defaults[name]) and not _same(cfg_value, value):
+            raise ValueError(
+                f"{cls.__name__}.{name} given both via config= "
+                f"({cfg_value!r}) and as a kwarg ({value!r}); drop one "
+                f"(equal duplicates are allowed)")
+        merged[name] = value
+    return dataclasses.replace(config, **merged) if merged else config
+
+
+def _same(a, b) -> bool:
+    if a is b:
+        return True
+    try:
+        return bool(a == b)
+    except Exception:               # arrays, meshes: identity was the test
+        return False
+
+
+UNSET = _UNSET                      # constructors import this as a default
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every knob :class:`GraphServeEngine` is built from.
+
+    ``f_in`` is the one required field (the engine cannot guess the
+    feature width); everything else keeps the constructor's historical
+    default.  ``weights``/``mesh``/``cost_model`` hold live objects --
+    equality on those falls back to identity, so round-trip comparisons
+    stay well-defined.
+    """
+
+    f_in: int
+    model: str = "gcn"
+    hidden: int = 16
+    n_classes: int = 7
+    weights: Optional[Dict[str, Any]] = None
+    weight_seed: int = 0
+    weight_density: float = 1.0
+    slots: int = 4
+    min_bucket: int = 64
+    strategy: str = "dynamic"
+    n_cc: int = 7
+    align: int = 16
+    on_chip_bytes: int = 256 * 1024
+    donate: bool = True
+    collect_report: bool = False
+    keep_codes: bool = False
+    mesh: Optional[Any] = None
+    cost_model: Optional[Any] = None
+    format_aware: bool = True
+    csr_rmax: int = 64
+
+    def validate(self) -> "EngineConfig":
+        if self.f_in < 1:
+            raise ValueError(f"f_in {self.f_in} < 1")
+        if self.slots < 1:
+            raise ValueError(f"slots {self.slots} < 1")
+        if self.hidden < 1 or self.n_classes < 1:
+            raise ValueError(
+                f"hidden {self.hidden} / n_classes {self.n_classes} < 1")
+        return self
+
+    def __eq__(self, other):
+        if not isinstance(other, EngineConfig):
+            return NotImplemented
+        return all(_same(getattr(self, f.name), getattr(other, f.name))
+                   for f in dataclasses.fields(self))
+
+    __hash__ = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every knob :class:`ContinuousGraphServer` is built from.
+
+    The first block is the PR-4/5/7 cutting policy, unchanged defaults.
+    The second block is the overload-control policy (DESIGN.md section
+    15):
+
+    * ``shed`` -- admission rejection policy.  ``"never"`` admits
+      everything (the historical behavior); ``"predicted-miss"`` rejects
+      requests whose predicted completion already misses their deadline;
+      ``"capacity"`` rejects once ``max_pending`` requests are queued.
+      Whatever the policy, every ticket carries the ``predicted_miss``
+      signal.
+    * ``admit_margin`` -- slack multiple under which an admitted request
+      is classified ``"admit-at-risk"`` instead of ``"admit"`` (>= 1).
+    * ``max_pending`` -- queue bound for ``shed="capacity"``.
+    * ``pressure_threshold`` -- backlog wait-bound (seconds) above which
+      the scheduler degrades by policy: lowest-class at-risk queued
+      requests are shed until the bound recovers.  ``inf`` = never.
+    * ``priority_weight`` -- per-class weight base: a priority-``p``
+      request's class weight is ``priority_weight ** p`` (weighted-fair
+      cross-bucket dispatch; 1.0 makes all classes equal).
+    * ``autoscale`` -- resize mode only: re-pick the ``plan_groups`` lane
+      count each tick by minimizing the predicted het-LPT finish over the
+      per-size EWMA walls, instead of always spreading to ``n_lanes``.
+    """
+
+    clock: Callable[[], float] = time.monotonic
+    ewma_alpha: float = 0.25
+    cold_start_wall: float = 0.05
+    slack_margin: float = 1.5
+    batch_patience: float = 1.0
+    max_wait: float = 0.25
+    n_lanes: Optional[int] = None
+    resize: bool = False
+    # -- overload control (DESIGN.md section 15) -----------------------------
+    shed: str = "never"
+    admit_margin: float = 1.5
+    max_pending: Optional[int] = None
+    pressure_threshold: float = math.inf
+    priority_weight: float = 2.0
+    autoscale: bool = False
+
+    def validate(self) -> "ServeConfig":
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(f"ewma_alpha {self.ewma_alpha} not in (0, 1]")
+        # the PR-4 constructor only checked ewma_alpha and n_lanes; a
+        # negative max_wait silently force-cut every tick and a negative
+        # slack_margin inverted the deadline comparison -- reject all four
+        # at the edge (ISSUE 8 bugfix).
+        for name in ("cold_start_wall", "slack_margin", "batch_patience",
+                     "max_wait"):
+            v = getattr(self, name)
+            if not v >= 0.0:            # also catches NaN
+                raise ValueError(f"{name} {v} must be >= 0")
+        if self.n_lanes is not None and self.n_lanes < 1:
+            raise ValueError(f"n_lanes {self.n_lanes} < 1")
+        if self.shed not in ("never", "predicted-miss", "capacity"):
+            raise ValueError(
+                f"shed {self.shed!r} not in 'never' | 'predicted-miss' | "
+                f"'capacity'")
+        if self.shed == "capacity" and (self.max_pending is None
+                                        or self.max_pending < 1):
+            raise ValueError(
+                f"shed='capacity' needs max_pending >= 1, got "
+                f"{self.max_pending}")
+        if not self.admit_margin >= 1.0:
+            raise ValueError(f"admit_margin {self.admit_margin} must be >= 1")
+        if not self.pressure_threshold > 0.0:
+            raise ValueError(
+                f"pressure_threshold {self.pressure_threshold} must be > 0")
+        if not self.priority_weight > 0.0:
+            raise ValueError(
+                f"priority_weight {self.priority_weight} must be > 0")
+        if self.autoscale and not self.resize:
+            raise ValueError("autoscale=True requires resize=True "
+                             "(it re-picks the plan_groups lane count)")
+        return self
+
+    def __eq__(self, other):
+        if not isinstance(other, ServeConfig):
+            return NotImplemented
+        return all(_same(getattr(self, f.name), getattr(other, f.name))
+                   for f in dataclasses.fields(self))
+
+    __hash__ = None

@@ -55,6 +55,7 @@ from repro.core.compiler import CompiledModel, GraphMeta
 from repro.core.perf_model import Primitive
 from repro.data import graphs as graph_data
 from repro.models import gnn as gnn_models
+from repro.serving.config import UNSET, EngineConfig, merge_config
 
 
 @dataclasses.dataclass
@@ -169,6 +170,13 @@ class GraphServeEngine:
     two >= the request's vertex count); ``align`` follows the test-scale
     partitioning convention of ``models.gnn.build_dense``.
 
+    The knobs consolidate into :class:`~repro.serving.config.EngineConfig`
+    (``config=`` / :meth:`from_config`; the resolved config is kept on
+    ``self.config``).  Every historical kwarg keeps working: explicit
+    kwargs override default-valued config fields, and a kwarg conflicting
+    with a field the config explicitly sets raises (serving.config's
+    ``merge_config`` rule, DESIGN.md section 15).
+
     ``mesh`` (a 1-D ``cores`` mesh, ``distributed.sharding.cores_mesh``)
     device-shards every wave: requests are LPT-binned into per-device
     slot ranges by predicted cost (:meth:`request_cost`) and each device
@@ -183,17 +191,36 @@ class GraphServeEngine:
     never re-traces.
     """
 
-    def __init__(self, model: str = "gcn", *, f_in: int, hidden: int = 16,
-                 n_classes: int = 7,
-                 weights: Optional[Dict[str, np.ndarray]] = None,
-                 weight_seed: int = 0, weight_density: float = 1.0,
-                 slots: int = 4, min_bucket: int = 64,
-                 strategy: str = "dynamic", n_cc: int = 7, align: int = 16,
-                 on_chip_bytes: int = 256 * 1024,
-                 donate: bool = True, collect_report: bool = False,
-                 keep_codes: bool = False, mesh: Optional[Mesh] = None,
-                 cost_model=None, format_aware: bool = True,
-                 csr_rmax: int = 64):
+    def __init__(self, model: str = UNSET, *,
+                 config: Optional[EngineConfig] = None,
+                 f_in: int = UNSET, hidden: int = UNSET,
+                 n_classes: int = UNSET,
+                 weights: Optional[Dict[str, np.ndarray]] = UNSET,
+                 weight_seed: int = UNSET, weight_density: float = UNSET,
+                 slots: int = UNSET, min_bucket: int = UNSET,
+                 strategy: str = UNSET, n_cc: int = UNSET, align: int = UNSET,
+                 on_chip_bytes: int = UNSET,
+                 donate: bool = UNSET, collect_report: bool = UNSET,
+                 keep_codes: bool = UNSET, mesh: Optional[Mesh] = UNSET,
+                 cost_model=UNSET, format_aware: bool = UNSET,
+                 csr_rmax: int = UNSET):
+        # every historical kwarg still works; ``config=`` supplies the
+        # consolidated base and ``merge_config`` arbitrates (explicit
+        # kwargs override default-valued config fields, conflicting
+        # duplicates raise -- serving.config, DESIGN.md section 15)
+        cfg = merge_config(EngineConfig, config, dict(
+            model=model, f_in=f_in, hidden=hidden, n_classes=n_classes,
+            weights=weights, weight_seed=weight_seed,
+            weight_density=weight_density, slots=slots,
+            min_bucket=min_bucket, strategy=strategy, n_cc=n_cc,
+            align=align, on_chip_bytes=on_chip_bytes, donate=donate,
+            collect_report=collect_report, keep_codes=keep_codes,
+            mesh=mesh, cost_model=cost_model, format_aware=format_aware,
+            csr_rmax=csr_rmax)).validate()
+        self.config = cfg
+        model, f_in, hidden, n_classes = (cfg.model, cfg.f_in, cfg.hidden,
+                                          cfg.n_classes)
+        weights, slots, mesh = cfg.weights, cfg.slots, cfg.mesh
         self.spec = gnn_models.make_model_spec(model, f_in, hidden, n_classes)
         self.f_in = f_in
         self.slots = slots
@@ -210,14 +237,14 @@ class GraphServeEngine:
                 f"slots={slots} not divisible by the {self.lanes}-device "
                 f"cores mesh")
         # keep the documented pad-to-pow2 contract whatever floor is passed
-        self.min_bucket = 1 << (max(min_bucket, 2) - 1).bit_length()
-        self.strategy = strategy
-        self.n_cc = n_cc
-        self.align = align
-        self.on_chip_bytes = on_chip_bytes
+        self.min_bucket = 1 << (max(cfg.min_bucket, 2) - 1).bit_length()
+        self.strategy = cfg.strategy
+        self.n_cc = cfg.n_cc
+        self.align = cfg.align
+        self.on_chip_bytes = cfg.on_chip_bytes
         if weights is None:
             weights = gnn_models.init_spec_weights(
-                self.spec, seed=weight_seed, density=weight_density)
+                self.spec, seed=cfg.weight_seed, density=cfg.weight_density)
         # one jnp array per weight, held for the engine's lifetime: the
         # executor's input-profile cache is identity-keyed, so steady-state
         # waves never re-profile them on the host.
@@ -228,12 +255,13 @@ class GraphServeEngine:
         # thread through to BOTH the serving executor and run_naive's
         # oracle engine, so format decisions stay part of the bitwise
         # serve == run_naive contract.
-        self.format_aware = format_aware
-        self.csr_rmax = csr_rmax
+        self.format_aware = cfg.format_aware
+        self.csr_rmax = cfg.csr_rmax
         self.executor = runtime.FusedModelExecutor(
-            strategy=strategy, model=cost_model, n_cc=n_cc, donate=donate,
-            collect_report=collect_report, keep_codes=keep_codes,
-            format_aware=format_aware, csr_rmax=csr_rmax)
+            strategy=cfg.strategy, model=cfg.cost_model, n_cc=cfg.n_cc,
+            donate=cfg.donate, collect_report=cfg.collect_report,
+            keep_codes=cfg.keep_codes, format_aware=cfg.format_aware,
+            csr_rmax=cfg.csr_rmax)
         self._compiled: Dict[int, CompiledModel] = {}
         self._input_names: Dict[int, List[str]] = {}
         self._naive: Optional[runtime.DynasparseEngine] = None
@@ -252,6 +280,15 @@ class GraphServeEngine:
         # lane-wall estimates seed from these (DESIGN.md section 14)
         self.group_walls: Dict[int, List[float]] = {}
         self.last_wave_report: Optional[runtime.InferenceReport] = None
+
+    @classmethod
+    def from_config(cls, config: EngineConfig) -> "GraphServeEngine":
+        """Build an engine from a consolidated :class:`EngineConfig`.
+
+        Round-trips: ``GraphServeEngine.from_config(eng.config)`` builds
+        an equivalent engine (same spec, same generated weights -- weight
+        generation is seeded -- same executor policy)."""
+        return cls(config=config)
 
     # -- admission ----------------------------------------------------------
     def _validate(self, req: GraphRequest) -> None:

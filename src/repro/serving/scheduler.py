@@ -52,6 +52,27 @@ that online layer (DESIGN.md section 11):
   ``completed_at`` and their ``deadline``), not a batch-final list.
   :meth:`drain` force-cuts everything left and flushes the stream.
 
+* **Overload control** (DESIGN.md section 15).  The server no longer
+  admits every request and chases every deadline.  :meth:`submit` returns
+  a structured :class:`Ticket` carrying an admission verdict (``admit`` /
+  ``admit-at-risk`` / ``shed``) classified from a predicted-completion
+  estimate (per-request Analyzer cost through a measured
+  seconds-per-cost-unit calibration, packed against the queue backlog
+  over the EWMA walls); the ``shed=`` policy decides whether a predicted
+  miss is rejected at the door.  Requests carry ``priority``/``tenant``
+  classes: full waves are composed highest-class-first (with an age-based
+  starvation backstop), cut waves dispatch in class-weighted LPT order
+  (``core.scheduler.schedule_weighted``), and per-class counters
+  (``class_stats``: admitted/shed/met/missed) plus a backlog pressure
+  gauge stream to the observability surface.  When the backlog's
+  heterogeneous-LPT bound exceeds ``pressure_threshold``, the scheduler
+  degrades by policy: lowest-class at-risk queued requests are shed
+  first, and (resize mode) ``autoscale=True`` re-picks the
+  ``plan_groups`` lane count each tick from the per-size EWMA walls
+  (:func:`plan_lanes`).  None of this touches numerics: admitted work
+  stays bitwise-identical to ``run_naive`` whatever the priorities,
+  tenants, or arrival order.
+
 The clock is injectable (``clock=``, default ``time.monotonic``) so the
 whole policy runs deterministically under a fake clock in tests
 (``tests/test_continuous_serving.py``); numerics never depend on it --
@@ -62,13 +83,15 @@ order, deadlines, or clock jitter.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import perf_model
 from repro.core import scheduler as core_scheduler
 from repro.distributed import sharding as dist_sharding
+from repro.serving.config import UNSET, ServeConfig, merge_config
 from repro.serving.graph_engine import (GraphRequest, GraphResult,
                                         GraphServeEngine)
 
@@ -131,6 +154,120 @@ def plan_groups(n_devices: int, demands: Sequence[float], slots: int,
     return sizes + [1] * spare
 
 
+def plan_lanes(n_devices: int, demands: Sequence[float], slots: int,
+               max_lanes: int,
+               size_wall: Optional[Callable[[int], float]] = None) -> int:
+    """Pick the lane count whose :func:`plan_groups` split finishes first.
+
+    Pure autoscale policy (resize mode, ``autoscale=True``): for each
+    candidate lane count ``k`` up to ``max_lanes``, plan the device-group
+    sizes and pack the ``demands`` (estimated wave walls, any order)
+    longest-first over the ``k`` groups -- each wave costed at no less
+    than its group's per-size wall from ``size_wall`` (the scheduler
+    passes its per-size EWMA estimates; ``None`` skips the floor) -- and
+    return the ``k`` with the smallest predicted finish.  Ties prefer
+    MORE lanes (parallel headroom costs nothing when the bound agrees),
+    so a backlog of many small waves spreads wide while a lone huge wave
+    collapses the plan to one full-mesh group whose measured wall is
+    genuinely lower (DESIGN.md section 15).
+    """
+    if max_lanes < 1:
+        raise ValueError(f"max_lanes {max_lanes} < 1")
+    dem = sorted((float(x) for x in demands), reverse=True)
+    if not dem:
+        raise ValueError("plan_lanes with no demands")
+    best_k, best_t = 1, math.inf
+    for k in range(1, min(len(dem), n_devices, max_lanes) + 1):
+        sizes = plan_groups(n_devices, dem, slots, max_groups=k)
+        finish = [0.0] * k
+        for c in dem:
+            g = min(range(k), key=lambda j: (finish[j], j))
+            floor = size_wall(sizes[g]) if size_wall is not None else 0.0
+            finish[g] += max(c, floor)
+        t = max(finish)
+        if t <= best_t + 1e-12:
+            best_k, best_t = k, min(t, best_t)
+    return best_k
+
+
+class Ticket(int):
+    """Structured admission ticket returned by
+    :meth:`ContinuousGraphServer.submit`.
+
+    An ``int`` subclass whose integer value IS the submission sequence
+    number, so every pre-overload caller keeps working unchanged --
+    ``int(ticket)``, equality/hashing against plain ints, dict keys,
+    format args all behave exactly like the old bare-int return.  On top
+    of that it carries the admission decision:
+
+    * ``verdict`` -- ``"admit"`` | ``"admit-at-risk"`` | ``"shed"``
+      (``admitted`` is the convenience bool; a shed ticket's request was
+      REJECTED and will never produce a result);
+    * ``predicted_miss`` -- the raw signal: completion was predicted past
+      the deadline at submit time, whatever the shed policy did about it;
+    * ``predicted_wall`` -- the predicted seconds until this request's
+      result (queue backlog pack + calibrated own-wave wall);
+    * ``bucket``, ``priority``, ``tenant``, ``deadline`` -- the
+      admission-time classification, echoed back.
+    """
+
+    def __new__(cls, seq: int, *, bucket: int = 0,
+                predicted_wall: float = 0.0, verdict: str = "admit",
+                predicted_miss: bool = False, priority: int = 0,
+                tenant: str = "default",
+                deadline: Optional[float] = None):
+        self = super().__new__(cls, seq)
+        self.bucket = int(bucket)
+        self.predicted_wall = float(predicted_wall)
+        self.verdict = str(verdict)
+        self.predicted_miss = bool(predicted_miss)
+        self.priority = int(priority)
+        self.tenant = str(tenant)
+        self.deadline = deadline
+        return self
+
+    @property
+    def seq(self) -> int:
+        return int(self)
+
+    @property
+    def admitted(self) -> bool:
+        return self.verdict != "shed"
+
+    def __repr__(self) -> str:
+        return (f"Ticket({int(self)}, bucket={self.bucket}, "
+                f"verdict={self.verdict!r}, "
+                f"predicted_wall={self.predicted_wall:.4g}, "
+                f"predicted_miss={self.predicted_miss}, "
+                f"priority={self.priority}, tenant={self.tenant!r})")
+
+    # printing/formatting a ticket must keep producing the bare number
+    # (callers log ticket ids with f-strings); only repr is structured
+    __str__ = int.__repr__
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-(tenant, priority) serving counters (DESIGN.md section 15).
+
+    ``admitted`` counts requests enqueued at submit; ``shed`` counts
+    rejections at the admission door PLUS pressure sheds pulled back out
+    of the queue; ``met``/``missed`` split delivered results by deadline
+    outcome (deadline-less deliveries count as ``met`` -- they cannot
+    miss).  Conservation: submits == admitted + door sheds, and
+    admitted == delivered + pressure sheds + still-queued.
+    """
+
+    admitted: int = 0
+    shed: int = 0
+    met: int = 0
+    missed: int = 0
+
+    @property
+    def delivered(self) -> int:
+        return self.met + self.missed
+
+
 @dataclasses.dataclass
 class QueuedRequest:
     """One queue entry: the request plus its admission-time metadata."""
@@ -140,6 +277,10 @@ class QueuedRequest:
     bucket: int
     arrival: float                  # clock time at submit
     deadline: Optional[float]       # ABSOLUTE clock deadline (None = none)
+    priority: int = 0               # class: higher dispatches sooner
+    tenant: str = "default"         # accounting stream for class_stats
+    cost: float = 0.0               # Analyzer cost units (calibration)
+    ticket: Optional[Ticket] = None
 
 
 @dataclasses.dataclass
@@ -154,6 +295,9 @@ class WaveLog:
     lane: int = 0                   # dispatch lane the wave was pulled by
     group_size: int = 1             # device-group width the wave ran on
     #                                 (resize mode; 1-lane/unsharded = 1)
+    classes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #                                 priority -> real-request count (the
+    #                                 wave's class composition)
 
 
 class _EwmaWall:
@@ -180,9 +324,10 @@ class ContinuousGraphServer:
     """Deadline-aware online scheduler over a :class:`GraphServeEngine`.
 
     >>> eng = GraphServeEngine("gcn", f_in=64, n_classes=7, slots=4)
-    >>> srv = ContinuousGraphServer(eng)
-    >>> srv.submit(req, deadline=srv.clock() + 0.05)
-    0
+    >>> srv = ContinuousGraphServer(eng)        # or config=ServeConfig(...)
+    >>> t = srv.submit(req, deadline=srv.clock() + 0.05, priority=1)
+    >>> int(t), t.verdict, t.predicted_miss    # Ticket is an int subclass
+    (0, 'admit', False)
     >>> done = srv.poll()          # dispatches any cuttable waves
     >>> tail = srv.drain()         # force-flush at shutdown
 
@@ -222,35 +367,60 @@ class ContinuousGraphServer:
     """
 
     def __init__(self, engine: GraphServeEngine, *,
-                 clock: Callable[[], float] = time.monotonic,
-                 ewma_alpha: float = 0.25,
-                 cold_start_wall: float = 0.05,
-                 slack_margin: float = 1.5,
-                 batch_patience: float = 1.0,
-                 max_wait: float = 0.25,
-                 n_lanes: Optional[int] = None,
-                 resize: bool = False):
-        if not 0.0 < ewma_alpha <= 1.0:
-            raise ValueError(f"ewma_alpha {ewma_alpha} not in (0, 1]")
-        if resize and engine.mesh is None:
+                 config: Optional[ServeConfig] = None,
+                 clock: Callable[[], float] = UNSET,
+                 ewma_alpha: float = UNSET,
+                 cold_start_wall: float = UNSET,
+                 slack_margin: float = UNSET,
+                 batch_patience: float = UNSET,
+                 max_wait: float = UNSET,
+                 n_lanes: Optional[int] = UNSET,
+                 resize: bool = UNSET,
+                 shed: str = UNSET,
+                 admit_margin: float = UNSET,
+                 max_pending: Optional[int] = UNSET,
+                 pressure_threshold: float = UNSET,
+                 priority_weight: float = UNSET,
+                 autoscale: bool = UNSET):
+        cfg = merge_config(ServeConfig, config, dict(
+            clock=clock, ewma_alpha=ewma_alpha,
+            cold_start_wall=cold_start_wall, slack_margin=slack_margin,
+            batch_patience=batch_patience, max_wait=max_wait,
+            n_lanes=n_lanes, resize=resize, shed=shed,
+            admit_margin=admit_margin, max_pending=max_pending,
+            pressure_threshold=pressure_threshold,
+            priority_weight=priority_weight,
+            autoscale=autoscale)).validate()
+        if cfg.resize and engine.mesh is None:
             raise ValueError(
                 "resize=True needs an engine with a cores mesh to partition")
+        self.config = cfg
         self.engine = engine
-        self.clock = clock
-        self.ewma_alpha = ewma_alpha
-        self.cold_start_wall = cold_start_wall
-        self.slack_margin = slack_margin
-        self.batch_patience = batch_patience
-        self.max_wait = max_wait
+        self.clock = cfg.clock
+        self.ewma_alpha = cfg.ewma_alpha
+        self.cold_start_wall = cfg.cold_start_wall
+        self.slack_margin = cfg.slack_margin
+        self.batch_patience = cfg.batch_patience
+        self.max_wait = cfg.max_wait
+        # overload-control policy (DESIGN.md section 15)
+        self.shed = cfg.shed
+        self.admit_margin = cfg.admit_margin
+        self.max_pending = cfg.max_pending
+        self.pressure_threshold = cfg.pressure_threshold
+        self.priority_weight = cfg.priority_weight
+        self._autoscale = bool(cfg.autoscale)
         # dispatch lanes: one per device group (default: one per device of
         # the engine's cores mesh; 1 when unsharded).  Waves cut in one
         # tick are pulled by the earliest-idle lane, so the wait a queued
         # request sees is the LPT makespan over the lanes, not the serial
         # sum -- ``wait_bound`` models exactly that.
-        n_lanes = engine.lanes if n_lanes is None else int(n_lanes)
-        if n_lanes < 1:
-            raise ValueError(f"n_lanes {n_lanes} < 1")
+        n_lanes = engine.lanes if cfg.n_lanes is None else int(cfg.n_lanes)
         self.n_lanes = n_lanes
+        # rebind the sentinel-defaulted locals the rest of the constructor
+        # reads to their RESOLVED values
+        resize = cfg.resize
+        ewma_alpha = cfg.ewma_alpha
+        cold_start_wall = cfg.cold_start_wall
         # resize mode: between waves, partition the engine's mesh into
         # DISJOINT per-lane device groups sized from queue composition
         # (``plan_groups``) and dispatch each wave on its own group via
@@ -291,31 +461,158 @@ class ContinuousGraphServer:
         self.dispatch_log: List[WaveLog] = []
         self.submitted = 0
         self.dispatched = 0
+        # overload-control observability: per-(tenant, priority) counters,
+        # the tickets of every shed request (door + pressure), the raw
+        # shed split, and the highest backlog bound any tick has seen.
+        self.class_stats: Dict[Tuple[str, int], ClassStats] = {}
+        self.shed_log: List[Ticket] = []
+        self.admitted = 0
+        self.shed_at_submit = 0
+        self.shed_under_pressure = 0
+        self.peak_pressure = 0.0
+        self.last_auto_lanes: Optional[int] = None
+        # seconds-per-cost-unit calibration: Analyzer cost units of each
+        # dispatched wave against its measured wall, so admission can
+        # floor a request's own-wave estimate by its PREDICTED cost even
+        # when its bucket's EWMA is still cold
+        self._calib = perf_model.CostCalibration(alpha=cfg.ewma_alpha)
+        # wave-occupancy feedback for the admission/backlog model: under
+        # deadline pressure waves cut PARTIAL, so clearing q requests
+        # costs ceil(q / measured-real-per-wave) walls, not ceil(q /
+        # slots).  EWMA of each dispatched wave's real count, seeded at
+        # full occupancy (= the optimistic pre-overload assumption).
+        self._occupancy = _EwmaWall(cfg.ewma_alpha, float(engine.slots),
+                                    float(engine.slots))
+        # server-level wall-clock per wave (cut -> delivery), an EWMA
+        # floor for the admission/backlog model only: bucket EWMAs
+        # measure the DEVICE wall (launch -> ready), but each wave also
+        # pays host prep/teardown, and admission that ignores it admits
+        # requests doomed to miss.  Cold start 0.0 = no floor, so cut
+        # policy and clock-frozen tests see the pre-overload model.
+        self._wave_floor = _EwmaWall(cfg.ewma_alpha, None, 0.0)
+        # self-calibrating admission: EWMA of (actual sojourn / the
+        # sojourn the ticket itself predicted), observed at every
+        # delivery.  The pack model cannot see tick granularity, fill
+        # wait, or priority reordering; whatever it systematically misses
+        # shows up here and scales future admission bounds.  Only ratios
+        # > 1 are applied (max(1, bias) at the door): an optimistic model
+        # sheds too little and must be corrected, a pessimistic one
+        # already errs safe -- and clock-frozen tests (sojourn 0) keep
+        # their pinned verdicts.
+        self._model_bias = _EwmaWall(cfg.ewma_alpha, 1.0, 1.0)
+
+    @classmethod
+    def from_config(cls, engine: GraphServeEngine,
+                    config: ServeConfig) -> "ContinuousGraphServer":
+        """Round-trip constructor:
+        ``ContinuousGraphServer.from_config(srv.engine, srv.config)``
+        builds a server with the exact same policy."""
+        return cls(engine, config=config)
 
     # -- queue --------------------------------------------------------------
     def submit(self, request: GraphRequest,
-               deadline: Optional[float] = None) -> int:
-        """Enqueue one request; returns its ticket (submission sequence).
+               deadline: Optional[float] = None, *,
+               priority: int = 0, tenant: str = "default") -> Ticket:
+        """Enqueue one request; returns its admission :class:`Ticket`.
+
+        The ticket is an ``int`` (the submission sequence, exactly the old
+        return value) carrying the admission decision: a predicted
+        completion (:meth:`admission_estimate`: queue backlog packed over
+        the EWMA walls, the request's own wave floored by its calibrated
+        Analyzer cost) classifies the request ``admit`` /
+        ``admit-at-risk`` / ``shed`` against its deadline slack, and the
+        ``shed=`` policy decides whether a predicted miss (or, under
+        ``shed="capacity"``, a full queue) is rejected at the door.  A
+        shed ticket's request is NOT queued and never produces a result
+        (check ``ticket.admitted``).
 
         ``deadline`` is an ABSOLUTE time on this server's clock (pass
         ``srv.clock() + budget``); ``None`` means best-effort -- the
-        request still dispatches within ``max_wait`` of arrival.  The
-        request is validated here (malformed input must fail at the
-        admission edge, not poison a wave later).
+        request still dispatches within ``max_wait`` of arrival and is
+        never shed by deadline prediction.  ``priority`` (higher = more
+        urgent, default 0) and ``tenant`` set the request's class for
+        weighted-fair dispatch and per-class accounting; neither ever
+        changes numerics, only ordering.  The request is validated here
+        (malformed input must fail at the admission edge, not poison a
+        wave later).
         """
         self.engine._validate(request)
         bucket = self.engine.bucket_for(request.n_vertices)
-        ticket = self._seq
+        now = self.clock()
+        cost = float(self.engine.request_cost(request))
+        # measured-bias correction: scale the pack model's estimate by how
+        # much actual sojourns have been exceeding predicted ones (never
+        # below 1x -- see _model_bias)
+        bound = (self.admission_estimate(bucket, cost)
+                 * max(1.0, self._model_bias.value))
+        slack = math.inf if deadline is None else deadline - now
+        predicted_miss = slack < bound
+        if (self.shed == "capacity" and self.max_pending is not None
+                and self.pending >= self.max_pending):
+            verdict = "shed"
+        elif predicted_miss:
+            verdict = ("shed" if self.shed == "predicted-miss"
+                       else "admit-at-risk")
+        elif slack < self.admit_margin * bound:
+            verdict = "admit-at-risk"
+        else:
+            verdict = "admit"
+        seq = self._seq
         self._seq += 1
-        self._queues.setdefault(bucket, []).append(QueuedRequest(
-            ticket, request, bucket, self.clock(), deadline))
         self.submitted += 1
+        ticket = Ticket(seq, bucket=bucket, predicted_wall=bound,
+                        verdict=verdict, predicted_miss=predicted_miss,
+                        priority=int(priority), tenant=str(tenant),
+                        deadline=deadline)
+        stats = self._stats_for(ticket.tenant, ticket.priority)
+        if verdict == "shed":
+            stats.shed += 1
+            self.shed_at_submit += 1
+            self.shed_log.append(ticket)
+            return ticket
+        stats.admitted += 1
+        self.admitted += 1
+        self._queues.setdefault(bucket, []).append(QueuedRequest(
+            seq, request, bucket, now, deadline, priority=ticket.priority,
+            tenant=ticket.tenant, cost=cost, ticket=ticket))
         return ticket
+
+    def _stats_for(self, tenant: str, priority: int) -> ClassStats:
+        key = (tenant, priority)
+        stats = self.class_stats.get(key)
+        if stats is None:
+            stats = self.class_stats[key] = ClassStats()
+        return stats
+
+    def _account_delivery(self, entry: QueuedRequest, done_at: float) -> None:
+        stats = self._stats_for(entry.tenant, entry.priority)
+        if entry.deadline is None or done_at <= entry.deadline:
+            stats.met += 1
+        else:
+            stats.missed += 1
+        # close the admission feedback loop: actual sojourn vs the sojourn
+        # this very ticket predicted at the door (clamped: one outlier
+        # must not swing the EWMA by orders of magnitude)
+        if entry.ticket is not None and entry.ticket.predicted_wall > 1e-9:
+            ratio = (done_at - entry.arrival) / entry.ticket.predicted_wall
+            self._model_bias.observe(min(8.0, max(0.25, ratio)))
+
+    @staticmethod
+    def _wave_classes(wave: List[QueuedRequest]) -> Dict[int, int]:
+        classes: Dict[int, int] = {}
+        for e in wave:
+            classes[e.priority] = classes.get(e.priority, 0) + 1
+        return classes
 
     @property
     def pending(self) -> int:
         """Requests queued but not yet dispatched."""
         return sum(len(q) for q in self._queues.values())
+
+    @property
+    def pressure(self) -> float:
+        """Current backlog pressure gauge: :meth:`backlog_bound` seconds."""
+        return self.backlog_bound()
 
     def estimate(self, bucket: int) -> float:
         """Current EWMA wave-wall estimate for ``bucket`` (seconds)."""
@@ -399,14 +696,27 @@ class ContinuousGraphServer:
         full mesh) degenerates to the plain serial sum, exactly the
         shared-mesh single-lane bound.
         """
+        costs = [self.estimate(bucket)]
+        for b, q in self._queues.items():
+            if b != bucket and q:
+                costs.append(self.estimate(b))
+        return self._pack_bound(costs) * self.slack_margin
+
+    def _pack_bound(self, costs: List[float]) -> float:
+        """Predicted finish (seconds, UNSCALED) of ``costs`` estimated wave
+        walls packed over the dispatch concurrency -- the one pack model
+        behind :meth:`wait_bound`, :meth:`backlog_bound`, and
+        :meth:`admission_estimate`.  Shared mesh: LPT over
+        ``pipeline_depth`` with the average per-lane EWMA wall as a
+        per-wave floor (serial sum with one lane).  Resize: heterogeneous
+        LPT over the groups ``plan_groups`` would cut, floored by the
+        per-SIZE EWMA walls."""
+        if not costs:
+            return 0.0
         if self._resize:
-            costs = [self.estimate(bucket)]
-            for b, q in self._queues.items():
-                if b != bucket and q:
-                    costs.append(self.estimate(b))
             k = min(len(costs), self.n_devices, self.n_lanes)
             if k == 1:
-                return sum(costs) * self.slack_margin
+                return float(sum(costs))
             sizes = plan_groups(self.n_devices,
                                 sorted(costs, reverse=True),
                                 self.engine.slots, max_groups=self.n_lanes)
@@ -414,21 +724,100 @@ class ContinuousGraphServer:
             for c in sorted(costs, reverse=True):
                 g = min(range(k), key=lambda j: (finish[j], j))
                 finish[g] += max(c, self._size_wall(sizes[g]).value)
-            return max(finish) * self.slack_margin
+            return max(finish)
         if self.n_lanes == 1:
-            bound = self.estimate(bucket)
-            for b, q in self._queues.items():
-                if b != bucket and q:
-                    bound += self.estimate(b)
-            return bound * self.slack_margin
+            return float(sum(costs))
         lane_wall = float(np.mean([e.value for e in self._lane_ewma]))
-        costs = [max(self.estimate(bucket), lane_wall)]
+        return core_scheduler.schedule_lpt(
+            [max(c, lane_wall) for c in costs], self.pipeline_depth).makespan
+
+    def backlog_bound(self) -> float:
+        """Predicted seconds to clear the ENTIRE queue as of now: every
+        implied wave (``ceil(queued / slots)`` per bucket, partials
+        included) packed over the dispatch concurrency.  This is the
+        overload pressure gauge -- :meth:`poll` sheds at-risk queued work
+        when it exceeds ``pressure_threshold`` -- and it is NOT scaled by
+        ``slack_margin`` (a raw completion estimate, not a cut trigger).
+        Wave counts divide by the MEASURED occupancy EWMA, not ``slots``:
+        under deadline pressure waves cut partial, and modeling full
+        occupancy would underestimate time-to-clear exactly when the
+        gauge matters most.  Each wave is floored by the measured
+        server-level wall-clock per wave (host prep included), not just
+        the device wall.  ``0.0`` with an empty queue."""
+        costs: List[float] = []
+        per_wave = self._per_wave()
+        floor = self._wave_floor.value
         for b, q in self._queues.items():
-            if b != bucket and q:
-                costs.append(max(self.estimate(b), lane_wall))
-        bound = core_scheduler.schedule_lpt(
-            costs, self.pipeline_depth).makespan
-        return bound * self.slack_margin
+            if q:
+                n_waves = math.ceil(len(q) / per_wave)
+                costs.extend([max(self.estimate(b), floor)] * n_waves)
+        return self._pack_bound(costs)
+
+    def _per_wave(self) -> float:
+        """Effective requests per dispatched wave: the occupancy EWMA
+        observed on real waves (seeded at ``slots``), clamped to [1,
+        slots].  The backlog and admission models count implied waves
+        against THIS, so partial-wave regimes (deadline cuts under
+        overload) feed back into honest, larger clear-time predictions."""
+        return min(float(self.engine.slots), max(1.0, self._occupancy.value))
+
+    def admission_estimate(self, bucket: int, cost: float = 0.0) -> float:
+        """Predicted seconds until a request submitted to ``bucket`` RIGHT
+        NOW has its result: the queue backlog's implied waves plus the
+        request's own wave, packed over the dispatch concurrency.  The own
+        wave costs the bucket's EWMA estimate floored by the request's
+        calibrated Analyzer cost (``CostCalibration``: measured
+        seconds-per-cost-unit), so an unusually expensive request in a
+        cheap bucket is predicted honestly even before its wave ever ran.
+        In the own bucket only the FULL waves queue ahead -- the request
+        itself rides the trailing partial wave.  Wave counts divide by
+        the measured occupancy EWMA (see :meth:`_per_wave`) and every
+        wave is floored by the measured server-level wall-clock per wave,
+        so admission stays honest when overload degrades waves to partial
+        cuts or host overhead dominates the device wall.  Unscaled
+        (classification headroom is ``admit_margin``'s job, not
+        ``slack_margin``'s)."""
+        floor = self._wave_floor.value
+        own = max(self.estimate(bucket), self._calib.seconds(cost, 0.0),
+                  floor)
+        costs = [own]
+        per_wave = self._per_wave()
+        for b, q in self._queues.items():
+            if not q:
+                continue
+            n_waves = (int(len(q) // per_wave) if b == bucket
+                       else math.ceil(len(q) / per_wave))
+            costs.extend([max(self.estimate(b), floor)] * n_waves)
+        return self._pack_bound(costs)
+
+    def _shed_pressure(self, now: float, bound: float) -> None:
+        """Degrade under load (DESIGN.md section 15): once the backlog
+        bound exceeds ``pressure_threshold``, shed EVERY at-risk queued
+        request -- ``deadline`` set and predicted to miss at the current
+        bound -- lowest class first, newest-first within a class (the
+        oldest have the most invested wait).  The bound is recomputed
+        after each shed, so the at-risk set shrinks honestly: shedding
+        the doomed tail restores slack to the survivors, and the loop
+        stops when nobody left is predicted to miss (NOT merely when the
+        gauge dips under the threshold -- a sub-threshold backlog can
+        still doom a request whose own slack is shorter).  Shed entries
+        are accounted exactly like door sheds (``class_stats``,
+        ``shed_log``), never silently dropped; deadline-less requests are
+        never pressure-shed."""
+        if bound <= self.pressure_threshold:
+            return
+        while True:
+            at_risk = [e for q in self._queues.values() for e in q
+                       if e.deadline is not None and e.deadline - now < bound]
+            if not at_risk:
+                return
+            victim = min(at_risk, key=lambda e: (e.priority, -e.seq))
+            self._queues[victim.bucket].remove(victim)
+            stats = self._stats_for(victim.tenant, victim.priority)
+            stats.shed += 1
+            self.shed_under_pressure += 1
+            self.shed_log.append(victim.ticket)
+            bound = self.backlog_bound()
 
     def _cut_reason(self, bucket: int, queue: List[QueuedRequest],
                     now: float) -> Optional[str]:
@@ -437,7 +826,9 @@ class ContinuousGraphServer:
             return None
         if len(queue) >= self.engine.slots:
             return "full"
-        oldest = queue[0]
+        # min over ALL arrivals, not queue[0]: class ordering may have
+        # moved a newer high-priority entry to the front
+        oldest = min(e.arrival for e in queue)
         # a forced cut takes the whole (sub-slots) queue, so deadline
         # pressure from ANY queued request -- not just the head -- cuts:
         # a tight deadline queued behind a loose one must not be starved
@@ -452,9 +843,54 @@ class ContinuousGraphServer:
         # max_wait stays the absolute starvation-freedom backstop
         patience = min(self.max_wait,
                        self.batch_patience * self.estimate(bucket))
-        if now - oldest.arrival >= patience:
+        if now - oldest >= patience:
             return "age"
         return None
+
+    def _class_order(self, queue: List[QueuedRequest],
+                     now: float) -> List[QueuedRequest]:
+        """Wave-composition order for one bucket queue: highest effective
+        class first, FIFO (seq) within a class.  The effective class is
+        the submitted priority, boosted above every real class once the
+        entry has waited ``max_wait`` (the per-class starvation backstop:
+        a stream of high-priority arrivals keeps cutting full waves ahead
+        of a low-priority entry until it ages, then it jumps the wave).
+        Single-class un-aged queues come back UNCHANGED -- pre-overload
+        wave composition, bit for bit."""
+        effs = [math.inf if now - e.arrival >= self.max_wait
+                else float(e.priority) for e in queue]
+        if all(x == effs[0] for x in effs):
+            return queue
+        order = sorted(range(len(queue)),
+                       key=lambda i: (-effs[i], queue[i].seq))
+        return [queue[i] for i in order]
+
+    def _shed_doomed(self, bucket: int, queue: List[QueuedRequest],
+                     now: float) -> List[QueuedRequest]:
+        """Under ``shed="predicted-miss"``, drop queued entries that can no
+        longer hit: remaining slack below their own wave's wall (EWMA
+        estimate floored by the measured server-level wall-clock, with the
+        same ``slack_margin`` headroom deadline cuts use -- the wall is an
+        estimate, and an entry inside its error band is a miss in
+        expectation).  Dispatching such an entry only converts a shed into
+        a guaranteed miss while burning a slot a live request could use.
+        Accounted exactly like pressure sheds; deadline-less entries never
+        qualify.  A no-op under every other policy -- ``shed="never"``
+        chases every admitted request to the end, late or not."""
+        if self.shed != "predicted-miss":
+            return queue
+        wall = (max(self.estimate(bucket), self._wave_floor.value)
+                * self.slack_margin)
+        kept: List[QueuedRequest] = []
+        for e in queue:
+            if e.deadline is None or e.deadline - now >= wall:
+                kept.append(e)
+                continue
+            stats = self._stats_for(e.tenant, e.priority)
+            stats.shed += 1
+            self.shed_under_pressure += 1
+            self.shed_log.append(e.ticket)
+        return kept
 
     def _cut_ready(self, now: float, *, drain: bool = False
                    ) -> List[tuple]:
@@ -462,6 +898,8 @@ class ContinuousGraphServer:
         reason, cut_at)] with queues updated in place."""
         ready = []
         for bucket, queue in self._queues.items():
+            queue = self._shed_doomed(bucket, queue, now)
+            queue = self._class_order(queue, now)
             while True:
                 reason = "drain" if drain and queue else None
                 reason = self._cut_reason(bucket, queue, now) or reason
@@ -475,23 +913,38 @@ class ContinuousGraphServer:
             self._queues[bucket] = queue
         return ready
 
+    def _wave_weight(self, wave: List[QueuedRequest]) -> float:
+        """Class weight of a cut wave for the weighted-fair launch order:
+        ``priority_weight ** p`` for the wave's highest priority ``p``
+        (exponent clamped to +-64 so pathological priorities cannot
+        overflow).  All-default-priority waves weigh 1.0 exactly."""
+        p = max(e.priority for e in wave)
+        return float(self.priority_weight) ** max(-64, min(64, p))
+
     def _pack_order(self, ready: List[tuple]) -> List[tuple]:
-        """LPT cross-bucket packing: urgent (deadline/age) cuts first, then
-        ``core.scheduler.schedule_lpt`` over the EWMA wall estimates --
-        longest-first, one dispatch lane, deterministic."""
+        """Weighted-fair cross-bucket packing: urgent (deadline/age) cuts
+        first, then ``core.scheduler.schedule_weighted`` over the EWMA
+        wall estimates with the waves' class weights -- a high-priority
+        wave launches ahead of an equal-cost best-effort one, while a
+        long-enough low-priority wave still launches early (weighted
+        fairness, not strict priority).  With all priorities at the
+        default the weights are all 1.0 and the order is exactly the
+        pre-overload ``schedule_lpt`` one."""
         if len(ready) <= 1:
             return ready
 
-        def lpt(group: List[tuple]) -> List[tuple]:
+        def wlpt(group: List[tuple]) -> List[tuple]:
             if len(group) <= 1:
                 return group
             costs = [self.estimate(bucket) for bucket, _, _, _ in group]
-            order = core_scheduler.schedule_lpt(costs, 1).assignment[0]
+            weights = [self._wave_weight(wave) for _, wave, _, _ in group]
+            order = core_scheduler.schedule_weighted(
+                costs, weights, 1).assignment[0]
             return [group[i] for i in order]
 
         urgent = [r for r in ready if r[2] in ("deadline", "age")]
         rest = [r for r in ready if r[2] not in ("deadline", "age")]
-        return lpt(urgent) + lpt(rest)
+        return wlpt(urgent) + wlpt(rest)
 
     # -- scheduler tick -----------------------------------------------------
     def poll(self) -> List[GraphResult]:
@@ -503,8 +956,19 @@ class ContinuousGraphServer:
         newly completed results -- each stamped with its ``deadline`` and
         wave-completion ``completed_at``.  Returns ``[]`` when nothing was
         ready; callers loop ``poll`` between arrivals.
+
+        Every tick first reads the backlog pressure gauge
+        (:meth:`backlog_bound`; the peak is kept on ``peak_pressure``)
+        and, above ``pressure_threshold``, sheds at-risk queued work
+        lowest-class-first (:meth:`_shed_pressure`) before cutting.
         """
-        return self._dispatch(self._cut_ready(self.clock()))
+        now = self.clock()
+        pressure = self.backlog_bound()
+        if pressure > self.peak_pressure:
+            self.peak_pressure = pressure
+        if pressure > self.pressure_threshold:
+            self._shed_pressure(now, pressure)
+        return self._dispatch(self._cut_ready(now))
 
     def drain(self) -> List[GraphResult]:
         """Force-flush: cut everything still queued (partial waves allowed,
@@ -544,6 +1008,7 @@ class ContinuousGraphServer:
         depth = self.pipeline_depth
         in_flight: List[tuple] = []        # (lane, est, wave-entries,
         #                                     reason, cut_at, InFlightWave)
+        prev_done = [None]                 # last harvest time THIS tick
 
         def harvest(item) -> None:
             lane, est, wave, reason, cut_at, handle = item
@@ -553,17 +1018,34 @@ class ContinuousGraphServer:
             wall = self.engine.bucket_walls[handle.bucket][-1]
             self._ewma_for(handle.bucket).observe(wall)
             self._lane_ewma[lane].observe(wall)
+            self._calib.observe(sum(e.cost for e in wave), wall)
+            self._occupancy.observe(len(wave))
+            # MARGINAL wall-clock for this wave: waves cut in the same
+            # tick dispatch back-to-back, so (done - cut) of a later wave
+            # includes its predecessors' walls and would inflate the
+            # admission floor several-fold at steady load
+            start = (cut_at if prev_done[0] is None
+                     else max(cut_at, prev_done[0]))
+            self._wave_floor.observe(done_at - start)
+            prev_done[0] = done_at
             self.dispatch_log.append(WaveLog(
                 handle.bucket, len(wave), reason, cut_at, wall, lane,
-                group_size=handle.pending.lanes))
+                group_size=handle.pending.lanes,
+                classes=self._wave_classes(wave)))
             self.dispatched += len(wave)
             for entry, res in zip(wave, wave_results):
                 res.deadline = entry.deadline
                 res.completed_at = done_at
+                self._account_delivery(entry, done_at)
                 results.append(res)
 
         try:
             for bucket, wave, reason, cut_at in self._pack_order(ready):
+                # last-moment doomed check: earlier waves in this tick may
+                # have pushed the clock past this wave's remaining slack
+                wave = self._shed_doomed(bucket, wave, self.clock())
+                if not wave:
+                    continue
                 while len(in_flight) >= depth:
                     harvest(in_flight.pop(0))
                 # earliest-idle lane; ties rotate from _next_lane so every
@@ -613,11 +1095,21 @@ class ContinuousGraphServer:
             self._undelivered = []
             return results
         ests = [self.estimate(bucket) for bucket, _, _, _ in packed]
+        # autoscale: re-pick the concurrent group count each tick from the
+        # per-size EWMA walls instead of always spreading to n_lanes -- a
+        # lone huge wave collapses to one wide group (whose measured wall
+        # is lower), a deep backlog of small waves spreads out again
+        max_lanes = self.n_lanes
+        if self._autoscale:
+            max_lanes = plan_lanes(self.n_devices, ests, self.engine.slots,
+                                   self.n_lanes,
+                                   size_wall=self.group_estimate)
+            self.last_auto_lanes = max_lanes
         sizes = plan_groups(self.n_devices, sorted(ests, reverse=True),
-                            self.engine.slots, max_groups=self.n_lanes)
+                            self.engine.slots, max_groups=max_lanes)
         groups = dist_sharding.partition_mesh(self.engine.mesh, sizes)
         self.last_group_sizes = list(sizes)
-        k = min(len(packed), self.n_devices, self.n_lanes)
+        k = min(len(packed), self.n_devices, max_lanes)
         # wave -> group: demand-descending waves greedily take the
         # earliest-finishing of the k demand-assigned groups (ties toward
         # the wider group -- plan_groups sizes are descending), so the
@@ -632,6 +1124,7 @@ class ContinuousGraphServer:
             assign[i] = g
         in_flight: Dict[int, tuple] = {}    # group -> (wave-entries,
         #                                      reason, cut_at, InFlightWave)
+        prev_done = [None]                 # last harvest time THIS tick
 
         def harvest(g: int) -> None:
             wave, reason, cut_at, handle = in_flight.pop(g)
@@ -640,17 +1133,31 @@ class ContinuousGraphServer:
             wall = self.engine.bucket_walls[handle.bucket][-1]
             self._ewma_for(handle.bucket).observe(wall)
             self._size_wall(handle.pending.lanes).observe(wall)
+            self._calib.observe(sum(e.cost for e in wave), wall)
+            self._occupancy.observe(len(wave))
+            # marginal wall-clock (see _dispatch): don't charge this wave
+            # for predecessors harvested earlier in the same tick
+            start = (cut_at if prev_done[0] is None
+                     else max(cut_at, prev_done[0]))
+            self._wave_floor.observe(done_at - start)
+            prev_done[0] = done_at
             self.dispatch_log.append(WaveLog(
                 handle.bucket, len(wave), reason, cut_at, wall, g,
-                group_size=handle.pending.lanes))
+                group_size=handle.pending.lanes,
+                classes=self._wave_classes(wave)))
             self.dispatched += len(wave)
             for entry, res in zip(wave, wave_results):
                 res.deadline = entry.deadline
                 res.completed_at = done_at
+                self._account_delivery(entry, done_at)
                 results.append(res)
 
         try:
             for i, (bucket, wave, reason, cut_at) in enumerate(packed):
+                # last-moment doomed check (see _dispatch)
+                wave = self._shed_doomed(bucket, wave, self.clock())
+                if not wave:
+                    continue
                 g = assign[i]
                 if g in in_flight:          # one wave per group at a time
                     harvest(g)

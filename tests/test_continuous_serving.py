@@ -305,6 +305,41 @@ def test_submit_validates_at_the_edge():
     assert srv.pending == 0
 
 
+@pytest.mark.parametrize("flush", ["poll", "drain"])
+def test_undelivered_results_survive_mid_dispatch_failure(flush):
+    """Results harvested before a failed dispatch are NOT lost: the next
+    ``poll()``/``drain()`` delivers them exactly once, in order."""
+    clk = FakeClock()
+    eng = _engine(slots=2)
+    srv = _server(eng, clk)
+    reqs = _reqs(4, sizes=(24,))
+    for r in reqs:
+        srv.submit(r, deadline=clk.t + 1e9)     # two full waves queued
+
+    real_begin = eng.begin_wave
+    calls = {"n": 0}
+
+    def flaky(bucket, wave, submesh=None):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected dispatch failure")
+        return real_begin(bucket, wave, submesh=submesh)
+
+    eng.begin_wave = flaky
+    with pytest.raises(RuntimeError, match="injected"):
+        srv.poll()
+    eng.begin_wave = real_begin
+    # wave 1 completed and was harvested before wave 2's begin failed:
+    # its results are stranded, not dropped
+    assert len(srv._undelivered) == 2
+    out = srv.drain() if flush == "drain" else srv.poll()
+    assert [r.request_id for r in out[:2]] == [reqs[0].request_id,
+                                               reqs[1].request_id]
+    # and they surface exactly once
+    assert srv._undelivered == []
+    assert srv.poll() == [] and srv.drain() == []
+
+
 # -- resize policy (disjoint device groups, DESIGN.md section 14) -----------
 
 def test_resize_requires_mesh():

@@ -1,0 +1,323 @@
+"""Overload-controlled serving (DESIGN.md §15): admission, priority,
+shedding, autoscaling.
+
+Deterministic policy pins under a fake clock plus an oracle-parity fuzz:
+
+* :class:`Ticket` keeps full backward compatibility with the old bare-int
+  return while carrying the admission verdict;
+* admission classifies ``admit`` / ``admit-at-risk`` / ``shed`` from the
+  predicted completion, and the ``shed=`` policy decides rejections
+  (``"predicted-miss"`` at the deadline, ``"capacity"`` at the queue
+  bound) -- a shed request is never served and is fully accounted;
+* priority classes compose full waves highest-class-first with the aged
+  starvation backstop, and per-class counters / wave class composition /
+  the pressure gauge conserve requests exactly;
+* pressure shedding drops lowest-class at-risk queued work first;
+* :func:`plan_lanes` picks the autoscaled lane count from the per-size
+  walls;
+* none of it touches numerics: admitted results stay bitwise-equal to
+  ``run_naive`` under fuzzed priorities, tenants, and arrival order.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.perf_model import CostCalibration
+from repro.serving.graph_engine import (GraphRequest, GraphServeEngine,
+                                        random_requests)
+from repro.serving.scheduler import (ClassStats, ContinuousGraphServer,
+                                     Ticket, plan_lanes)
+
+F_IN, HIDDEN, CLASSES = 32, 8, 6
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0, jitter_rng=None, jitter: float = 0.0):
+        self.t = t
+        self.jitter_rng = jitter_rng
+        self.jitter = jitter
+
+    def __call__(self) -> float:
+        if self.jitter_rng is not None and self.jitter > 0.0:
+            self.t += float(self.jitter_rng.random()) * self.jitter
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("min_bucket", 32)
+    return GraphServeEngine("gcn", f_in=F_IN, hidden=HIDDEN,
+                            n_classes=CLASSES, **kw)
+
+
+def _reqs(n=5, seed=1, sizes=(24,)):
+    return random_requests(n, f_in=F_IN, sizes=sizes, seed=seed)
+
+
+def _server(eng, clk, **kw):
+    kw.setdefault("cold_start_wall", 0.01)
+    kw.setdefault("max_wait", 100.0)
+    kw.setdefault("batch_patience", float("inf"))
+    return ContinuousGraphServer(eng, clock=clk, **kw)
+
+
+# -- Ticket back-compat -----------------------------------------------------
+
+def test_ticket_is_int_compatible():
+    t = Ticket(3, bucket=32, predicted_wall=0.02, verdict="admit-at-risk",
+               predicted_miss=False, priority=2, tenant="gold")
+    assert t == 3 and int(t) == 3 and t.seq == 3
+    assert {t: "x"}[3] == "x" and f"{t}" == "3"
+    assert t + 1 == 4                      # plain int arithmetic works
+    assert t.admitted and t.verdict == "admit-at-risk"
+    assert Ticket(9, verdict="shed").admitted is False
+
+
+def test_submit_tickets_are_sequential_ints():
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk)
+    tickets = [srv.submit(r) for r in _reqs(2)]
+    assert tickets == [0, 1]               # the old bare-int contract
+    assert all(isinstance(t, Ticket) for t in tickets)
+    assert all(t.verdict == "admit" for t in tickets)   # no deadline
+
+
+# -- admission verdicts -----------------------------------------------------
+
+def test_admission_verdict_bands():
+    clk = FakeClock()
+    srv = _server(_engine(slots=4), clk)   # cold: bound == cold_start_wall
+    r = _reqs(3)
+    bound = srv.admission_estimate(32)
+    assert bound == pytest.approx(0.01)
+    t = srv.submit(r[0], deadline=clk.t + 100.0)
+    assert (t.verdict, t.predicted_miss) == ("admit", False)
+    # slack inside [bound, admit_margin * bound): admitted, flagged at risk
+    t = srv.submit(r[1], deadline=clk.t + 1.2 * t.predicted_wall)
+    assert (t.verdict, t.predicted_miss) == ("admit-at-risk", False)
+    # slack below the bound: predicted miss; shed="never" still admits
+    t = srv.submit(r[2], deadline=clk.t + 1e-6)
+    assert (t.verdict, t.predicted_miss) == ("admit-at-risk", True)
+    assert srv.pending == 3 and srv.admitted == 3 and srv.shed_at_submit == 0
+
+
+def test_predicted_miss_shedding_rejects_at_the_door():
+    clk = FakeClock()
+    srv = _server(_engine(slots=4), clk, shed="predicted-miss")
+    keep, drop = _reqs(2)
+    t_keep = srv.submit(keep, deadline=clk.t + 100.0)
+    t_drop = srv.submit(drop, deadline=clk.t + 1e-6)
+    assert t_keep.admitted and not t_drop.admitted
+    assert t_drop.verdict == "shed" and t_drop.predicted_miss
+    assert srv.pending == 1 and srv.shed_at_submit == 1
+    assert srv.shed_log == [t_drop]
+    # a shed request is never served
+    out = srv.drain()
+    assert [r.request_id for r in out] == [keep.request_id]
+    # deadline-less traffic is never shed by prediction
+    assert srv.submit(_reqs(1, seed=9)[0]).verdict == "admit"
+
+
+def test_capacity_shedding_bounds_the_queue():
+    clk = FakeClock()
+    srv = _server(_engine(slots=4), clk, shed="capacity", max_pending=2)
+    reqs = _reqs(4)
+    verdicts = [srv.submit(r).verdict for r in reqs]
+    assert verdicts == ["admit", "admit", "shed", "shed"]
+    assert srv.pending == 2 and srv.shed_at_submit == 2
+
+
+def test_class_counters_conserve_requests():
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk, shed="predicted-miss")
+    reqs = _reqs(5)
+    srv.submit(reqs[0], priority=1, tenant="gold")
+    srv.submit(reqs[1], priority=1, tenant="gold")
+    srv.submit(reqs[2], deadline=clk.t + 1e-6, tenant="free")   # shed
+    t3 = srv.submit(reqs[3], deadline=clk.t + 100.0, tenant="free")
+    srv.poll()                              # gold full wave dispatches
+    clk.advance(200.0)
+    srv.submit(reqs[4], tenant="free")      # already past reqs[3] deadline
+    srv.drain()
+    gold = srv.class_stats[("gold", 1)]
+    free = srv.class_stats[("free", 0)]
+    assert (gold.admitted, gold.shed, gold.met, gold.missed) == (2, 0, 2, 0)
+    # reqs[3] was ADMITTED (slack was fine at the door) but its deadline
+    # passed while queued: under shed="predicted-miss" certainly-doomed
+    # work is shed at cut time instead of delivered late
+    assert free.admitted == 2 and free.shed == 2
+    assert t3 in srv.shed_log
+    assert free.missed == 0
+    assert free.met == 1                    # deadline-less reqs[4] counts met
+    # conservation: every submitted request is delivered exactly once OR
+    # accounted in the shed log -- never both, never silently dropped
+    delivered = sum(s.delivered for s in srv.class_stats.values())
+    assert delivered == srv.dispatched == 3
+    assert delivered + len(srv.shed_log) == srv.submitted == 5
+
+
+def test_shed_never_delivers_late_instead_of_dropping():
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk)    # default shed="never"
+    req = _reqs(1)[0]
+    srv.submit(req, deadline=clk.t + 1e-6)
+    clk.advance(100.0)                      # way past the deadline
+    out = srv.drain()
+    assert [r.request_id for r in out] == [req.request_id]
+    stats = srv.class_stats[("default", 0)]
+    assert (stats.missed, stats.met) == (1, 0)
+    assert srv.shed_log == []
+
+
+# -- priority composition ---------------------------------------------------
+
+def test_full_wave_composes_highest_class_first():
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk)
+    a, b, c = _reqs(3)
+    srv.submit(a, priority=0)
+    srv.submit(b, priority=0)
+    srv.submit(c, priority=5)
+    out = srv.poll()                        # one full wave of 2
+    assert sorted(r.request_id for r in out) == sorted(
+        [a.request_id, c.request_id])       # c jumps b, FIFO within class
+    assert srv.dispatch_log[0].classes == {5: 1, 0: 1}
+    assert srv.pending == 1                 # b waits for the next wave
+
+
+def test_aged_low_priority_entry_jumps_the_wave():
+    """Starvation backstop: once an entry has waited ``max_wait``, its
+    effective class beats every real priority, so a stream of
+    high-priority arrivals cannot displace it indefinitely."""
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk, max_wait=1.0)
+    old = _reqs(1)[0]
+    srv.submit(old, priority=0)
+    clk.advance(2.0)                        # past max_wait
+    hi1, hi2 = _reqs(2, seed=5)
+    srv.submit(hi1, priority=9)
+    srv.submit(hi2, priority=9)
+    out = srv.poll()
+    first_wave = srv.dispatch_log[0]
+    assert first_wave.classes == {0: 1, 9: 1}
+    served = {r.request_id for r in out}
+    assert old.request_id in served and hi1.request_id in served
+
+
+# -- pressure degradation ---------------------------------------------------
+
+def test_pressure_sheds_lowest_class_at_risk_first():
+    clk = FakeClock()
+    srv = _server(_engine(slots=8), clk, pressure_threshold=0.005)
+    safe, risky_hi, risky_lo = _reqs(3)
+    t_safe = srv.submit(safe, deadline=clk.t + 100.0)
+    t_hi = srv.submit(risky_hi, deadline=clk.t + 1e-6, priority=3)
+    t_lo = srv.submit(risky_lo, deadline=clk.t + 1e-6, priority=0)
+    assert srv.pending == 3
+    assert srv.backlog_bound() > srv.pressure_threshold
+    srv.poll()
+    # both at-risk entries shed, lowest class first; the safe one survives
+    assert srv.shed_log == [t_lo, t_hi]
+    assert srv.shed_under_pressure == 2 and srv.pending == 1
+    assert srv.class_stats[("default", 0)].shed == 1
+    assert srv.class_stats[("default", 3)].shed == 1
+    assert srv.peak_pressure > 0.005
+    out = srv.drain()
+    assert [r.request_id for r in out] == [safe.request_id]
+
+
+def test_deadline_less_requests_never_pressure_shed():
+    clk = FakeClock()
+    srv = _server(_engine(slots=8), clk, pressure_threshold=1e-9)
+    for r in _reqs(3):
+        srv.submit(r)                       # best-effort: no deadlines
+    srv.poll()
+    assert srv.shed_under_pressure == 0 and srv.pending == 3
+
+
+# -- lane autoscaling (pure policy) -----------------------------------------
+
+def test_plan_lanes_spreads_many_small_waves():
+    assert plan_lanes(4, [1.0, 1.0, 1.0, 1.0], slots=4, max_lanes=4) == 4
+
+
+def test_plan_lanes_single_wave_collapses_to_one_group():
+    assert plan_lanes(4, [5.0], slots=4, max_lanes=4) == 1
+
+
+def test_plan_lanes_size_walls_steer_the_choice():
+    # narrow groups are measured 10x slower than the wide one: packing two
+    # small waves onto one wide group beats two slow narrow groups
+    wall = {1: 10.0, 2: 1.0}
+    k = plan_lanes(2, [1.0, 1.0], slots=2, max_lanes=2,
+                   size_wall=lambda s: wall[s])
+    assert k == 1
+    # with honest (cheap) narrow groups the tie prefers more lanes
+    assert plan_lanes(2, [1.0, 1.0], slots=2, max_lanes=2) == 2
+
+
+def test_plan_lanes_validates():
+    with pytest.raises(ValueError):
+        plan_lanes(4, [], slots=4, max_lanes=4)
+    with pytest.raises(ValueError):
+        plan_lanes(4, [1.0], slots=4, max_lanes=0)
+
+
+# -- cost calibration -------------------------------------------------------
+
+def test_cost_calibration_converges_and_floors():
+    calib = CostCalibration(alpha=0.5)
+    assert calib.seconds(100.0, fallback=0.25) == 0.25   # cold: fallback
+    calib.observe(100.0, 1.0)               # 0.01 s per unit
+    assert calib.seconds(50.0) == pytest.approx(0.5)
+    calib.observe(100.0, 3.0)               # EWMA folds toward 0.03
+    assert calib.seconds(100.0) == pytest.approx(2.0)
+    calib.observe(0.0, 1.0)                 # degenerate samples ignored
+    calib.observe(10.0, 0.0)
+    assert calib.seconds(100.0) == pytest.approx(2.0)
+
+
+def test_calibration_feeds_admission_estimate():
+    clk = FakeClock()
+    srv = _server(_engine(slots=2), clk)
+    for r in _reqs(2):
+        srv.submit(r)
+    srv.poll()                              # one dispatched wave calibrates
+    assert srv._calib.seconds_per_unit is not None
+    cheap = srv.admission_estimate(32, cost=0.0)
+    dear = srv.admission_estimate(32, cost=1e9)
+    assert dear > cheap                     # predicted cost floors the wave
+
+
+# -- numerics are untouched -------------------------------------------------
+
+def test_fuzzed_priorities_keep_oracle_parity():
+    rng = np.random.default_rng(11)
+    clk = FakeClock(jitter_rng=rng, jitter=0.0005)
+    eng = _engine(slots=3)
+    srv = _server(eng, clk)
+    reqs = _reqs(12, seed=3, sizes=(24, 60))
+    oracle = {o.request_id: o for o in eng.run_naive(reqs)}
+    out = []
+    for r in reqs:
+        dl = (None if rng.random() < 0.3
+              else clk.t + float(rng.uniform(0.005, 5.0)))
+        t = srv.submit(r, deadline=dl, priority=int(rng.integers(0, 4)),
+                       tenant=str(rng.integers(0, 3)))
+        assert t.admitted                   # shed="never" admits everything
+        if rng.random() < 0.5:
+            out += srv.poll()
+        clk.advance(float(rng.uniform(0.0, 0.02)))
+    out += srv.drain()
+    assert sorted(r.request_id for r in out) == sorted(
+        r.request_id for r in reqs)
+    for res in out:
+        np.testing.assert_array_equal(
+            res.logits, oracle[res.request_id].logits,
+            err_msg=f"request {res.request_id} differs from run_naive")
+    # every delivery accounted to exactly one class
+    assert sum(s.delivered for s in srv.class_stats.values()) == len(reqs)

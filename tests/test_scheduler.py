@@ -121,3 +121,47 @@ def test_assign_bins_balances_cost():
     lpt_max = max(costs[bins == b].sum() for b in range(4))
     static_max = max(costs[2 * b: 2 * b + 2].sum() for b in range(4))
     assert lpt_max <= static_max
+
+
+# -- schedule_weighted (class-weighted LPT, DESIGN.md section 15) -----------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_equal_weights_reproduce_schedule_lpt(seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10.0, size=12)
+    lpt = scheduler.schedule_lpt(costs, 3)
+    wlpt = scheduler.schedule_weighted(costs, np.ones_like(costs), 3)
+    assert wlpt.assignment == lpt.assignment
+    assert wlpt.makespan == lpt.makespan
+    assert wlpt.policy == "wlpt"
+
+
+def test_weight_promotes_equal_cost_task():
+    sched = scheduler.schedule_weighted([1.0, 1.0], [1.0, 10.0], 1)
+    assert sched.assignment == [[1, 0]]     # heavier class launches first
+    # ...but a long-enough cheap-class task still goes first (weighted
+    # fairness, not strict priority)
+    sched = scheduler.schedule_weighted([20.0, 1.0], [1.0, 10.0], 1)
+    assert sched.assignment == [[0, 1]]
+
+
+def test_weighted_core_time_stays_unweighted():
+    sched = scheduler.schedule_weighted([2.0, 3.0], [5.0, 1.0], 2)
+    assert sorted(sched.core_time.tolist()) == [2.0, 3.0]
+    assert sched.makespan == 3.0            # weights shape order, not walls
+
+
+def test_weighted_validates():
+    with pytest.raises(ValueError, match="weights"):
+        scheduler.schedule_weighted([1.0, 2.0], [1.0], 2)
+    with pytest.raises(ValueError, match="non-positive"):
+        scheduler.schedule_weighted([1.0], [0.0], 1)
+    with pytest.raises(ValueError, match="exceed"):
+        scheduler.schedule_weighted([1.0] * 5, [1.0] * 5, 2, capacity=2)
+
+
+def test_weighted_capacity_respected():
+    sched = scheduler.schedule_weighted([3.0, 2.0, 1.0, 1.0],
+                                        [1.0, 1.0, 1.0, 1.0], 2, capacity=2)
+    assert all(len(a) <= 2 for a in sched.assignment)
+    assert _tasks(sched.assignment) == [0, 1, 2, 3]

@@ -1,0 +1,145 @@
+"""Consolidated serving config (DESIGN.md §15): merge rules, validation,
+round-trips.
+
+Pins the one ``merge_config`` rule both serving constructors share --
+explicit kwargs override config fields left at their default, equal
+duplicates pass, conflicting duplicates raise -- plus the ISSUE-8 bugfix
+(negative ``slack_margin`` / ``batch_patience`` / ``max_wait`` /
+``cold_start_wall`` now fail at construction through EITHER door) and the
+``from_config`` round-trips for engine and server.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.serving.config import (EngineConfig, ServeConfig, UNSET,
+                                  merge_config)
+from repro.serving.graph_engine import GraphServeEngine
+from repro.serving.scheduler import ContinuousGraphServer
+
+F_IN = 32
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("min_bucket", 32)
+    return GraphServeEngine("gcn", f_in=F_IN, hidden=8, n_classes=6, **kw)
+
+
+# -- merge_config rules -----------------------------------------------------
+
+def test_kwargs_build_config_without_config_arg():
+    cfg = merge_config(EngineConfig, None, dict(f_in=16, slots=UNSET,
+                                                hidden=32))
+    assert (cfg.f_in, cfg.hidden, cfg.slots) == (16, 32, 4)
+
+
+def test_kwarg_overrides_field_left_at_default():
+    base = EngineConfig(f_in=16, slots=8)      # hidden left at default 16
+    cfg = merge_config(EngineConfig, base, dict(hidden=64))
+    assert (cfg.f_in, cfg.slots, cfg.hidden) == (16, 8, 64)
+
+
+def test_equal_duplicate_is_allowed():
+    base = EngineConfig(f_in=16, slots=8)
+    cfg = merge_config(EngineConfig, base, dict(slots=8))
+    assert cfg.slots == 8
+
+
+def test_conflicting_duplicate_raises():
+    base = EngineConfig(f_in=16, slots=8)
+    with pytest.raises(ValueError, match="slots"):
+        merge_config(EngineConfig, base, dict(slots=4))
+
+
+def test_unknown_field_raises_type_error():
+    with pytest.raises(TypeError, match="nonsense"):
+        merge_config(EngineConfig, None, dict(f_in=16, nonsense=1))
+
+
+def test_wrong_config_type_raises():
+    with pytest.raises(TypeError, match="ServeConfig"):
+        merge_config(ServeConfig, EngineConfig(f_in=16), {})
+
+
+# -- validation (including the ISSUE-8 bugfix) ------------------------------
+
+@pytest.mark.parametrize("field,value", [
+    ("slack_margin", -1.0),
+    ("batch_patience", -0.1),
+    ("max_wait", -2.0),
+    ("cold_start_wall", -0.01),
+    ("cold_start_wall", math.nan),
+])
+def test_negative_policy_knobs_rejected_via_kwargs(field, value):
+    with pytest.raises(ValueError, match=field):
+        ContinuousGraphServer(_engine(), **{field: value})
+
+
+def test_negative_policy_knobs_rejected_via_config():
+    cfg = ServeConfig(max_wait=-1.0)
+    with pytest.raises(ValueError, match="max_wait"):
+        ContinuousGraphServer(_engine(), config=cfg)
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(ewma_alpha=0.0), "ewma_alpha"),
+    (dict(n_lanes=0), "n_lanes"),
+    (dict(shed="sometimes"), "shed"),
+    (dict(shed="capacity"), "max_pending"),
+    (dict(shed="capacity", max_pending=0), "max_pending"),
+    (dict(admit_margin=0.5), "admit_margin"),
+    (dict(pressure_threshold=0.0), "pressure_threshold"),
+    (dict(priority_weight=0.0), "priority_weight"),
+    (dict(autoscale=True), "resize"),
+])
+def test_serve_config_validate_rejects(kw, match):
+    with pytest.raises(ValueError, match=match):
+        ServeConfig(**kw).validate()
+
+
+def test_engine_config_validate_rejects():
+    with pytest.raises(ValueError, match="f_in"):
+        EngineConfig(f_in=0).validate()
+    with pytest.raises(ValueError, match="slots"):
+        EngineConfig(f_in=8, slots=0).validate()
+
+
+# -- round-trips ------------------------------------------------------------
+
+def test_engine_from_config_round_trips():
+    eng = _engine(strategy="dense", n_cc=3)
+    clone = GraphServeEngine.from_config(eng.config)
+    assert clone.config == eng.config
+    assert (clone.slots, clone.f_in) == (eng.slots, eng.f_in)
+
+
+def test_server_from_config_round_trips():
+    eng = _engine()
+    srv = ContinuousGraphServer(eng, slack_margin=2.0, shed="predicted-miss",
+                                priority_weight=3.0)
+    clone = ContinuousGraphServer.from_config(eng, srv.config)
+    assert clone.config == srv.config
+    assert (clone.slack_margin, clone.shed, clone.priority_weight) == (
+        2.0, "predicted-miss", 3.0)
+
+
+def test_resolved_config_kept_on_instances():
+    eng = _engine()
+    assert isinstance(eng.config, EngineConfig)
+    srv = ContinuousGraphServer(eng, max_wait=0.5)
+    assert isinstance(srv.config, ServeConfig)
+    assert srv.config.max_wait == 0.5 == srv.max_wait
+
+
+def test_engine_conflicting_config_and_kwarg_raises():
+    cfg = dataclasses.replace(_engine().config, slots=8)
+    with pytest.raises(ValueError, match="slots"):
+        GraphServeEngine(config=cfg, slots=4)
+
+
+def test_frozen_configs_are_immutable():
+    cfg = ServeConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.max_wait = 1.0

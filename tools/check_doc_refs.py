@@ -57,9 +57,15 @@ PUBLIC = [
     ("repro.serving.graph_engine", ["GraphServeEngine", "GraphRequest",
                                     "GraphResult", "random_requests"]),
     # the continuous-serving surface (DESIGN 11 / README "Continuous
-    # serving")
+    # serving") plus the overload-control surface (DESIGN 15 / README
+    # "Overload-controlled serving")
     ("repro.serving.scheduler", ["ContinuousGraphServer", "QueuedRequest",
-                                 "WaveLog", "plan_groups"]),
+                                 "WaveLog", "plan_groups", "plan_lanes",
+                                 "Ticket", "ClassStats"]),
+    # the consolidated config surface (DESIGN 15): frozen dataclasses both
+    # serving constructors accept via config=
+    ("repro.serving.config", ["EngineConfig", "ServeConfig",
+                              "merge_config", "UNSET"]),
     # the sharded-dispatch surface (DESIGN 12 / README "Sharding waves
     # over a device mesh")
     ("repro.distributed.sharding", ["cores_mesh", "wave_spec",
@@ -85,7 +91,11 @@ PUBLIC_ATTRS = [
       "begin_wave", "finish_wave", "request_cost"]),
     ("repro.serving.scheduler", "ContinuousGraphServer",
      ["submit", "poll", "drain", "warmup", "wait_bound", "lane_estimate",
-      "group_estimate"]),
+      "group_estimate", "from_config", "backlog_bound",
+      "admission_estimate"]),
+    ("repro.serving.graph_engine", "GraphServeEngine", ["from_config"]),
+    ("repro.core.scheduler", "schedule_weighted", []),
+    ("repro.core.perf_model", "CostCalibration", ["observe", "seconds"]),
 ]
 
 
