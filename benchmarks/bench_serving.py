@@ -61,6 +61,17 @@ runs) the baseline's overall hit-rate collapses below
 is what survives it.  Smoke writes ``BENCH_serving.overload.smoke.json``;
 full runs merge ``overload_rows`` into ``BENCH_serving.json``.
 
+``--minibatch`` is the giant-graph ladder (DESIGN.md section 16): a
+power-law host graph (10^5 vertices on full runs) with its features
+pinned once in a ``FeatureStore``, a skewed seed-vertex query stream
+answered by ``MiniBatchServeEngine`` (neighbor sampling ->
+cache-or-wave -> per-wave store gather) vs the naive per-query
+sample+run loop.  Gates: bitwise parity against the per-seed oracle
+BEFORE any merge, cache hit-rate >= ``--minibatch-hit-floor`` under the
+skewed stream, and seed throughput >= ``--minibatch-tol`` x naive
+(smoke artifact ``BENCH_serving.minibatch.smoke.json``, full runs merge
+``minibatch_rows`` into ``BENCH_serving.json``).
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke              # CI gate
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke --continuous # + online gate
@@ -89,6 +100,7 @@ _CONT_SMOKE_OUT = _OUT.with_name("BENCH_serving.continuous.smoke.json")
 _MESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.multidevice.smoke.json")
 _SUBMESH_SMOKE_OUT = _OUT.with_name("BENCH_serving.submesh.smoke.json")
 _OVERLOAD_SMOKE_OUT = _OUT.with_name("BENCH_serving.overload.smoke.json")
+_MINIBATCH_SMOKE_OUT = _OUT.with_name("BENCH_serving.minibatch.smoke.json")
 
 F_IN = 64
 SIZES = (56, 100, 150)            # -> buckets 64, 128, 256
@@ -829,6 +841,155 @@ def run_overload(*, smoke: bool = False, fast: bool = True,
     return rows
 
 
+def _bench_minibatch(model: str, n_vertices: int, n_queries: int, *,
+                     fanouts=(8, 4), traffic_alpha: float = 1.6,
+                     cache_capacity: int = 4096, chunk: int = 8) -> dict:
+    """Giant-graph mini-batch serving vs the naive per-query loop
+    (DESIGN.md section 16).
+
+    ONE power-law host graph (``data.sampling.powerlaw_host_graph``) with
+    its features pinned once in a ``FeatureStore``; a skewed query stream
+    (seed vertices drawn under power-law weights -- hot vertices repeat,
+    which is the hot-vertex cache's whole case) is answered twice:
+
+    * **naive** -- per query, per seed: sample the subgraph, gather
+      features, one ``run_naive`` dispatch.  No batching, no caching, and
+      every repeat of a hot vertex pays the full sample+gather+run cost
+      again;
+    * **minibatch** -- ``MiniBatchServeEngine.serve_queries`` in arrival
+      chunks of ``chunk`` queries: cache hits answered at the door,
+      misses deduplicated across the chunk and wave-batched through the
+      shape buckets, per-wave feature gather straight from the pinned
+      store, results filling the LRU ``VertexCache``.
+
+    Bitwise parity against the per-seed oracle is asserted (sys.exit)
+    BEFORE any timing or artifact merge, on a throwaway front end so the
+    measured cache starts cold.  The row gates (in ``run_minibatch``):
+    cache hit-rate >= the floor under the skewed stream, and mini-batch
+    seed throughput >= tol x naive."""
+    from repro.data import graphs as graph_data
+    from repro.data.sampling import powerlaw_host_graph
+    from repro.serving.minibatch import FeatureStore, MiniBatchServeEngine
+    rng = np.random.default_rng(3)
+    graph = powerlaw_host_graph(n_vertices, avg_degree=8, seed=0)
+    store = FeatureStore(rng.standard_normal((n_vertices, F_IN),
+                                             dtype=np.float32))
+    eng = GraphServeEngine(model, f_in=F_IN, hidden=16, n_classes=7,
+                           slots=8, weight_seed=0)
+    mb = MiniBatchServeEngine(eng, graph, store, fanouts=fanouts,
+                              cache_capacity=cache_capacity)
+    # skewed traffic: seed vertices drawn under power-law weights (the
+    # Table VI marginal), independent of graph degree -- hot QUERY
+    # vertices, not necessarily hubs
+    w = graph_data.powerlaw_marginal(n_vertices, rng, alpha=traffic_alpha)
+    queries = [rng.choice(n_vertices, size=int(rng.integers(1, 5)),
+                          p=w).tolist() for _ in range(n_queries)]
+    # parity gate FIRST, on a throwaway front end (own cold cache) so the
+    # timed run below still measures a cold-start hit-rate; this also
+    # warms the engine's compile + trace for both paths
+    parity_mb = MiniBatchServeEngine(eng, graph, store, fanouts=fanouts,
+                                     cache_capacity=cache_capacity)
+    par_q = queries[:4]
+    for t, want in zip(parity_mb.serve_queries(par_q),
+                       parity_mb.oracle_queries(par_q)):
+        if not np.array_equal(t.result(), want):
+            sys.exit(f"minibatch parity FAILED: {model} query "
+                     f"{t.query_id} differs from the per-seed oracle")
+    emit(f"serving.minibatch.parity.{model}", 0.0,
+         f"{len(par_q)} queries bitwise OK vs per-seed run_naive")
+    n_seed_runs = sum(len(dict.fromkeys(q)) for q in queries)
+    # naive per-query loop: every seed occurrence sampled + run one at a
+    # time (repeats of hot vertices pay full price -- no cross-query state)
+    from repro.serving.minibatch import SeedRequest
+    t0 = time.perf_counter()
+    for q in queries:
+        for v in dict.fromkeys(q):
+            req = SeedRequest(mb.planner.sample(v), store, request_id=-1)
+            eng.run_naive([req])
+    t_naive = time.perf_counter() - t0
+    # mini-batch path: same traffic, arrival chunks, cold cache
+    w0, waves0 = len(eng.wave_loads), eng.waves
+    t0 = time.perf_counter()
+    for i in range(0, len(queries), chunk):
+        mb.serve_queries(queries[i:i + chunk])
+    t_mb = time.perf_counter() - t0
+    stats = mb.cache.stats
+    row = {
+        "mode": "minibatch", "model": model,
+        "n_vertices": graph.n_vertices, "n_edges": graph.n_edges,
+        "store_mb": store.nbytes / 2**20,
+        "n_queries": n_queries, "n_seed_runs": n_seed_runs,
+        "fanouts": list(fanouts), "chunk": chunk,
+        "cache_capacity": cache_capacity,
+        "traffic_alpha": traffic_alpha,
+        "cache": stats.as_dict(),
+        "hit_rate": stats.hit_rate,
+        "waves": eng.waves - waves0,
+        "padding_efficiency": _padding_efficiency(eng.wave_loads[w0:]),
+        "gather_seconds": (float(eng.last_wave_report.gather_seconds)
+                           if eng.last_wave_report is not None else 0.0),
+        "naive_throughput_sps": n_seed_runs / t_naive,
+        "minibatch_throughput_sps": n_seed_runs / t_mb,
+    }
+    row["throughput_speedup"] = (row["minibatch_throughput_sps"]
+                                 / row["naive_throughput_sps"])
+    emit(f"serving.minibatch.{model}", t_mb / n_queries * 1e6,
+         f"graph={graph.n_vertices}v/{graph.n_edges}e "
+         f"hit_rate={row['hit_rate']:.2f} "
+         f"throughput={row['minibatch_throughput_sps']:.1f} seeds/s "
+         f"({row['throughput_speedup']:.2f}x naive) "
+         f"waves={row['waves']} pad_eff={row['padding_efficiency']:.2f}")
+    return row
+
+
+def run_minibatch(*, smoke: bool = False, fast: bool = True,
+                  hit_floor: float = 0.5, tput_tol: float = 2.0,
+                  write_json: bool = True) -> list:
+    """Mini-batch serving ladder (``--minibatch``): oracle parity, then
+    the cached+batched front end vs the naive per-query sample+run loop
+    on one giant power-law host graph under skewed traffic.
+
+    Gates (all BEFORE the artifact merge): bitwise parity per model
+    (asserted inside ``_bench_minibatch``), cache hit-rate >=
+    ``hit_floor`` under the skewed stream, and mini-batch seed
+    throughput >= ``tput_tol`` x naive.  Smoke (the serving CI job) runs
+    gcn on a scaled-down graph and writes
+    ``BENCH_serving.minibatch.smoke.json``; full runs use a 10^5-vertex
+    host graph and merge ``minibatch_rows`` into ``BENCH_serving.json``
+    without disturbing the other ladders."""
+    models, _, _ = _scale(smoke, fast)
+    n_vertices = 20_000 if smoke else 100_000
+    n_queries = 60 if smoke else 200
+    rows = [_bench_minibatch(m, n_vertices, n_queries) for m in models]
+    payload = {
+        "bench": "giant-graph mini-batch serving: sampler + pinned store "
+                 "+ hot-vertex cache vs naive per-query loop",
+        "device": jax.default_backend(),
+        "hit_floor": hit_floor,
+        "tput_tol": tput_tol,
+        "rows": rows,
+    }
+    if smoke:
+        # CI diagnostic: written even on gate failure (see run_mesh)
+        _MINIBATCH_SMOKE_OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    cold = [(r["model"], round(r["hit_rate"], 3)) for r in rows
+            if r["hit_rate"] < hit_floor]
+    if cold:
+        sys.exit(f"minibatch cache hit-rate below {hit_floor} under "
+                 f"skewed traffic: {cold}")
+    slow = [(r["model"], round(r["throughput_speedup"], 2)) for r in rows
+            if r["throughput_speedup"] < tput_tol]
+    if slow:
+        # gate BEFORE the merge, so a lagging run can't pollute the rows
+        sys.exit(f"minibatch throughput below {tput_tol}x the naive "
+                 f"per-query loop: {slow}")
+    if not smoke and write_json:
+        data = json.loads(_OUT.read_text()) if _OUT.exists() else {}
+        data["minibatch_rows"] = rows
+        _OUT.write_text(json.dumps(data, indent=2) + "\n")
+    return rows
+
+
 def _scale(smoke: bool, fast: bool) -> tuple:
     """(models, n_requests, rounds) for the sync AND continuous ladders --
     one source of truth so the smoke artifact's metadata can't drift from
@@ -942,6 +1103,23 @@ if __name__ == "__main__":
                          "full runs); with --smoke writes "
                          "BENCH_serving.overload.smoke.json, otherwise "
                          "merges overload_rows into BENCH_serving.json")
+    ap.add_argument("--minibatch", action="store_true",
+                    help="giant-graph mini-batch ladder: neighbor-sampled "
+                         "queries over one power-law host graph, pinned "
+                         "FeatureStore gather, hot-vertex cache -- gating "
+                         "bitwise oracle parity, the cache hit-rate floor "
+                         "under skewed traffic, and throughput vs the "
+                         "naive per-query sample+run loop; with --smoke "
+                         "writes BENCH_serving.minibatch.smoke.json, "
+                         "otherwise merges minibatch_rows into "
+                         "BENCH_serving.json")
+    ap.add_argument("--minibatch-hit-floor", type=float, default=0.5,
+                    help="minibatch gate: fail if the hot-vertex cache "
+                         "hit-rate < floor under the skewed query stream")
+    ap.add_argument("--minibatch-tol", type=float, default=2.0,
+                    help="minibatch gate: fail if mini-batch seed "
+                         "throughput < tol x the naive per-query loop.  "
+                         "CI's shared runners pass a looser value")
     ap.add_argument("--overload-hit-floor", type=float, default=0.9,
                     help="overload gate: fail if the shedding policy's "
                          "ADMITTED deadline hit-rate < floor at any "
@@ -984,6 +1162,17 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.submesh and not args.mesh:
         ap.error("--submesh extends the --mesh ladder; pass both")
+    if args.minibatch:
+        # --minibatch is its own ladder with its own gates; like --mesh it
+        # does not compose with the other modes in one invocation
+        if args.mesh or args.continuous or args.overload:
+            ap.error("--minibatch runs its own ladder; run --mesh/"
+                     "--continuous/--overload gates in their own "
+                     "invocations")
+        run_minibatch(smoke=args.smoke, fast=not args.full,
+                      hit_floor=args.minibatch_hit_floor,
+                      tput_tol=args.minibatch_tol)
+        sys.exit(0)
     if args.overload:
         # --overload is its own ladder with its own gates; like --mesh it
         # does not compose with the sync/continuous flags in one invocation

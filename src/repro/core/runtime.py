@@ -91,6 +91,12 @@ class InferenceReport:
     # lane count the wave was dispatched over (1 when unsharded): the size
     # of the ``cores`` mesh axis run_batch sharded the request scan across.
     wave_lanes: int = 1
+    # host seconds spent filling this wave's slot buffers (normalize +
+    # feature gather -- for store-backed mini-batch requests this is the
+    # per-wave gather from the pinned FeatureStore into the bucket-padded
+    # slots, DESIGN.md section 16).  Stamped by the admission layer like
+    # wave_real; 0.0 on non-wave paths.
+    gather_seconds: float = 0.0
 
     @property
     def total_cycles(self) -> float:

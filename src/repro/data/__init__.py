@@ -1,1 +1,2 @@
-"""Data substrates: synthetic graphs (paper benchmarks) + token pipeline."""
+"""Data substrates: synthetic graphs (paper benchmarks), giant-graph
+neighbor sampling (`data.sampling`), and the token pipeline."""

@@ -1,3 +1,5 @@
 """Serving substrate: batched LM prefill/decode engine (`serving.engine`),
-the batched GNN graph-serving engine (`serving.graph_engine`), and the
-continuous deadline-aware scheduler over it (`serving.scheduler`)."""
+the batched GNN graph-serving engine (`serving.graph_engine`), the
+continuous deadline-aware scheduler over it (`serving.scheduler`), and the
+giant-graph mini-batch front end (`serving.minibatch`: pinned feature
+store, hot-vertex cache, per-seed sampled-subgraph queries)."""

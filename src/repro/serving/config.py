@@ -164,6 +164,12 @@ class ServeConfig:
     * ``autoscale`` -- resize mode only: re-pick the ``plan_groups`` lane
       count each tick by minimizing the predicted het-LPT finish over the
       per-size EWMA walls, instead of always spreading to ``n_lanes``.
+    * ``minibatch`` -- a ``serving.minibatch.MiniBatchPlanner`` enabling
+      the giant-graph front door (DESIGN.md section 16):
+      ``submit_query(seeds, deadline=)`` samples one subgraph per seed
+      through the planner, answers hot seeds from its vertex cache, and
+      routes wave results back to waiting queries.  ``None`` (default)
+      keeps the whole-graph-only server.
     """
 
     clock: Callable[[], float] = time.monotonic
@@ -181,6 +187,7 @@ class ServeConfig:
     pressure_threshold: float = math.inf
     priority_weight: float = 2.0
     autoscale: bool = False
+    minibatch: Optional[Any] = None
 
     def validate(self) -> "ServeConfig":
         if not 0.0 < self.ewma_alpha <= 1.0:

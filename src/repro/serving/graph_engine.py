@@ -43,6 +43,7 @@ throughput) and gates CI on the batched path staying ahead.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -108,6 +109,8 @@ class InFlightWave:
     pending: runtime.PendingWave
     final: str                      # env name of the model's output tensor
     index: int                      # admission wave index (GraphResult.wave)
+    gather_seconds: float = 0.0     # host wall filling the slot buffers
+    #                                 (normalize + feature gather/copy)
 
 
 def random_requests(n_requests: int, *, f_in: int,
@@ -359,32 +362,42 @@ class GraphServeEngine:
             return (bucket, self.f_in)
         raise KeyError(f"no admission builder for graph input {name!r}")
 
-    def _padded(self, req: GraphRequest, bucket: int
-                ) -> Dict[str, np.ndarray]:
-        """Normalize-then-pad, for exactly the graph inputs this bucket's
-        compiled model consumes (``_input_names``, derived from the operand
-        flows).  Normalization sees the true graph -- padding vertices stay
-        isolated, zero rows/cols -- so real-vertex outputs are untouched by
-        the bucket size."""
-        self._compile(bucket)            # ensure _input_names is populated
+    def _fill_slot(self, req: GraphRequest,
+                   views: Dict[str, np.ndarray]) -> None:
+        """Normalize-then-fill ONE request into zero-initialized slot
+        views (one (bucket, ...) view per graph input).  Normalization
+        sees the true graph -- padding vertices stay isolated, zero
+        rows/cols -- so real-vertex outputs are untouched by the bucket
+        size.  Feature rows fill via the request's ``fill_features`` hook
+        when it has one (store-backed mini-batch requests gather straight
+        from the pinned FeatureStore into the slot, DESIGN.md section 16)
+        and a plain copy otherwise."""
         n = req.n_vertices
         adj = None
-        out = {}
-        for name in self._input_names[bucket]:
-            pad = np.zeros(self._input_shape(name, bucket), np.float32)
+        for name, view in views.items():
             if name == "H0":
-                pad[:n] = np.asarray(req.features, np.float32)
+                fill = getattr(req, "fill_features", None)
+                if fill is not None:
+                    fill(view[:n])
+                else:
+                    view[:n] = np.asarray(req.features, np.float32)
             else:
                 if adj is None:
                     adj = graph_data.normalize_adjacency(req.adjacency)
-                pad[:n, :n] = adj[0] if name == "A" else adj[1]
-            out[name] = pad
-        return out
+                view[:n, :n] = adj[0] if name == "A" else adj[1]
 
-    def _zero_tensors(self, bucket: int) -> Dict[str, np.ndarray]:
-        """Dummy slot: all-zero inputs -> all-SKIP plans, no numerics."""
-        return {name: np.zeros(self._input_shape(name, bucket), np.float32)
-                for name in self._input_names[bucket]}
+    def _padded(self, req: GraphRequest, bucket: int
+                ) -> Dict[str, np.ndarray]:
+        """One request's padded input dict, for exactly the graph inputs
+        this bucket's compiled model consumes (``_input_names``, derived
+        from the operand flows).  ``run_naive``'s admission path; the
+        wave path fills slot views of one batched buffer instead
+        (:meth:`begin_wave` over :meth:`_fill_slot`)."""
+        self._compile(bucket)            # ensure _input_names is populated
+        out = {name: np.zeros(self._input_shape(name, bucket), np.float32)
+               for name in self._input_names[bucket]}
+        self._fill_slot(req, out)
+        return out
 
     def cut_wave(self, entries: Sequence, *, force: bool = False
                  ) -> Tuple[list, list]:
@@ -517,18 +530,24 @@ class GraphServeEngine:
                 f"submesh group")
         cm = self._compile(bucket)
         slot_of = self._slot_layout(wave, lanes)
-        padded: List[Optional[Dict[str, np.ndarray]]] = [None] * self.slots
+        # ONE zero-initialized (slots, ...) buffer per graph input, filled
+        # slot-by-slot in place: dummy slots stay all-zero (all-SKIP
+        # plans) with no per-slot dict or np.stack copy, and store-backed
+        # requests gather their feature rows straight into their slot
+        # (``_fill_slot``'s fill_features hook).  The fill wall is the
+        # wave's per-wave gather cost (InferenceReport.gather_seconds).
+        t0 = time.perf_counter()
+        batched = {name: np.zeros(
+            (self.slots,) + self._input_shape(name, bucket), np.float32)
+            for name in self._input_names[bucket]}
         for req, slot in zip(wave, slot_of):
-            padded[slot] = self._padded(req, bucket)
-        for slot, p in enumerate(padded):
-            if p is None:                    # dummy slot: all-SKIP plans
-                padded[slot] = self._zero_tensors(bucket)
+            self._fill_slot(req, {name: buf[slot]
+                                  for name, buf in batched.items()})
+        gather_seconds = time.perf_counter() - t0
         # sharded waves stay host-side here: launch_batch device_puts them
         # straight onto the mesh (one host->per-device-shard transfer);
         # staging through jnp.asarray first would land the full stack on
         # one device and reshard from there.
-        batched = {name: np.stack([p[name] for p in padded])
-                   for name in self._input_names[bucket]}
         if mesh is None:
             batched = {name: jnp.asarray(v) for name, v in batched.items()}
         pending = self.executor.launch_batch(cm, self.weights, batched,
@@ -537,7 +556,8 @@ class GraphServeEngine:
         self.waves += 1
         return InFlightWave(bucket=bucket, wave=list(wave), slot_of=slot_of,
                             pending=pending,
-                            final=cm.graph.kernels[-1].out, index=index)
+                            final=cm.graph.kernels[-1].out, index=index,
+                            gather_seconds=gather_seconds)
 
     def finish_wave(self, inflight: "InFlightWave") -> List[GraphResult]:
         """Block on a :meth:`begin_wave` launch, record the serving
@@ -547,6 +567,7 @@ class GraphServeEngine:
         back out (wave order)."""
         outs, rep = self.executor.finish_batch(inflight.pending)
         rep.wave_real = len(inflight.wave)
+        rep.gather_seconds = inflight.gather_seconds
         self.last_wave_report = rep
         arr = np.asarray(outs[inflight.final])
         results = [GraphResult(req.request_id, arr[slot, : req.n_vertices],

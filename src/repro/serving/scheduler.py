@@ -381,7 +381,8 @@ class ContinuousGraphServer:
                  max_pending: Optional[int] = UNSET,
                  pressure_threshold: float = UNSET,
                  priority_weight: float = UNSET,
-                 autoscale: bool = UNSET):
+                 autoscale: bool = UNSET,
+                 minibatch=UNSET):
         cfg = merge_config(ServeConfig, config, dict(
             clock=clock, ewma_alpha=ewma_alpha,
             cold_start_wall=cold_start_wall, slack_margin=slack_margin,
@@ -390,7 +391,7 @@ class ContinuousGraphServer:
             admit_margin=admit_margin, max_pending=max_pending,
             pressure_threshold=pressure_threshold,
             priority_weight=priority_weight,
-            autoscale=autoscale)).validate()
+            autoscale=autoscale, minibatch=minibatch)).validate()
         if cfg.resize and engine.mesh is None:
             raise ValueError(
                 "resize=True needs an engine with a cores mesh to partition")
@@ -471,6 +472,17 @@ class ContinuousGraphServer:
         self.shed_under_pressure = 0
         self.peak_pressure = 0.0
         self.last_auto_lanes: Optional[int] = None
+        # giant-graph mini-batch front door (DESIGN.md section 16): a
+        # serving.minibatch.MiniBatchPlanner samples one subgraph per
+        # seed vertex, answers hot seeds from its vertex cache, and maps
+        # planner-issued (negative) request ids back to waiting queries.
+        # Whole-graph submit() callers should keep request ids
+        # non-negative so routing never mistakes their results.
+        self.minibatch = cfg.minibatch
+        self._query_seq = 0
+        self.queries_submitted = 0
+        self._query_waiters: Dict[int, List] = {}   # request_id -> tickets
+        self._inflight_seed: Dict[int, int] = {}    # vertex -> request_id
         # seconds-per-cost-unit calibration: Analyzer cost units of each
         # dispatched wave against its measured wall, so admission can
         # floor a request's own-wave estimate by its PREDICTED cost even
@@ -576,6 +588,90 @@ class ContinuousGraphServer:
             seq, request, bucket, now, deadline, priority=ticket.priority,
             tenant=ticket.tenant, cost=cost, ticket=ticket))
         return ticket
+
+    def submit_query(self, seeds: Sequence[int],
+                     deadline: Optional[float] = None, *,
+                     priority: int = 0, tenant: str = "default"):
+        """Giant-graph front door (DESIGN.md section 16): enqueue one
+        mini-batch QUERY -- seed vertices of the planner's host graph --
+        alongside whole-graph :meth:`submit` traffic.
+
+        Per (unique) seed vertex: a hot-vertex cache hit answers
+        immediately; a vertex already in flight coalesces (one sampled
+        request serves every query waiting on it -- exact, because each
+        vertex's subgraph is sampled under its own derived seed, so the
+        result is query-independent); otherwise the planner samples the
+        vertex's subgraph and the request is submitted through the normal
+        admission door (deadline/priority/tenant apply per seed request;
+        a shed seed is recorded on ``ticket.shed_seeds`` and its row
+        stays NaN).  Coalescing is version-checked: an in-flight request
+        that gathered features before a store update is NOT joined by a
+        query submitted after it -- the new query gets a fresh
+        post-update request, so no result ever reflects features older
+        than its own submission.
+
+        Returns a :class:`~repro.serving.minibatch.QueryTicket`; rows
+        fill as :meth:`poll`/:meth:`drain` complete waves (check
+        ``ticket.done``, then ``ticket.result()``).  Requires a
+        ``minibatch=`` planner (``ServeConfig.minibatch``).
+        """
+        from repro.serving.minibatch import QueryTicket
+        planner = self.minibatch
+        if planner is None:
+            raise ValueError(
+                "submit_query needs a minibatch planner: "
+                "ContinuousGraphServer(engine, "
+                "minibatch=MiniBatchPlanner(graph, store, ...))")
+        qt = QueryTicket(self._query_seq, [int(v) for v in seeds],
+                         deadline=deadline)
+        self._query_seq += 1
+        self.queries_submitted += 1
+        for v in dict.fromkeys(qt.seeds):
+            row = planner.lookup(v)
+            if row is not None:
+                qt.from_cache += 1
+                qt._fill(v, row)
+                continue
+            qt._pending.add(v)
+            rid = self._inflight_seed.get(v)
+            if rid is not None and rid in self._query_waiters:
+                inflight = planner.inflight_request(rid)
+                if (inflight is not None and inflight.store_version
+                        == planner.store.version):
+                    self._query_waiters[rid].append(qt)
+                    continue
+            req = planner.request_for(v)
+            ticket = self.submit(req, deadline, priority=priority,
+                                 tenant=tenant)
+            qt.tickets.append(ticket)
+            if not ticket.admitted:
+                planner.abandon(req)
+                qt.shed_seeds.append(v)
+                qt._fill(v, None)
+                continue
+            self._query_waiters[req.request_id] = [qt]
+            self._inflight_seed[v] = req.request_id
+        return qt
+
+    def _route(self, results: List[GraphResult]) -> List[GraphResult]:
+        """Split a tick's delivered results: planner-issued seed requests
+        route to their waiting query tickets (filling the vertex cache
+        via ``planner.complete``); everything else streams back to the
+        whole-graph caller unchanged."""
+        if self.minibatch is None or not self._query_waiters:
+            return results
+        out = []
+        for res in results:
+            waiters = self._query_waiters.pop(res.request_id, None)
+            if waiters is None:
+                out.append(res)
+                continue
+            vertex, row = self.minibatch.complete(res)
+            if self._inflight_seed.get(vertex) == res.request_id:
+                del self._inflight_seed[vertex]
+            for qt in waiters:
+                qt._fill(vertex, row, completed_at=res.completed_at)
+        return out
 
     def _stats_for(self, tenant: str, priority: int) -> ClassStats:
         key = (tenant, priority)
@@ -968,13 +1064,14 @@ class ContinuousGraphServer:
             self.peak_pressure = pressure
         if pressure > self.pressure_threshold:
             self._shed_pressure(now, pressure)
-        return self._dispatch(self._cut_ready(now))
+        return self._route(self._dispatch(self._cut_ready(now)))
 
     def drain(self) -> List[GraphResult]:
         """Force-flush: cut everything still queued (partial waves allowed,
         reason ``"drain"``), dispatch in packed order, return the results.
         The queue is empty afterwards."""
-        return self._dispatch(self._cut_ready(self.clock(), drain=True))
+        return self._route(
+            self._dispatch(self._cut_ready(self.clock(), drain=True)))
 
     def _dispatch(self, ready: List[tuple]) -> List[GraphResult]:
         """Dispatch the tick's cut waves over the ``n_lanes`` lanes.

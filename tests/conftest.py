@@ -1,5 +1,17 @@
 """Test env: single CPU device (the dry-run's 512-device override is
 strictly scoped to launch/dryrun.py; tests and benches must see 1 device).
+
+Also home of the shared hypothesis-or-seeded fallback: the property suites
+(``test_formats``, ``test_perf_model``, ``test_serving_properties``,
+``test_submesh_partition``, ``test_kernels``, ``test_sampling``) write each
+property as a plain checker function, drive it with hypothesis where
+installed (CI), and fall back to seeded parametrized sweeps otherwise.
+The fallback plumbing used to be copy-pasted per file; it is pinned here
+once -- ``from conftest import HAVE_HYPOTHESIS, given, settings, st``
+(tests/ has no __init__.py, so pytest's rootdir insertion makes conftest
+importable).  Without hypothesis, ``given`` marks its test skipped (the
+seeded sweeps cover the property), ``settings`` is a no-op, and ``st`` is
+an any-attribute stub so module-level strategy expressions still evaluate.
 """
 import os
 
@@ -7,6 +19,32 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``: any attribute is a
+        callable returning None, so strategy expressions written at module
+        scope (``st.integers(1, 40)``) evaluate without hypothesis."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed; the seeded sweeps cover "
+                       "this property")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
 
 
 @pytest.fixture

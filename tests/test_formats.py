@@ -15,11 +15,7 @@ import pytest
 
 from repro.core import formats
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from conftest import HAVE_HYPOTHESIS, given, settings, st
 
 
 def sparse(m, n, density, rng):

@@ -2,9 +2,10 @@
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# hypothesis-or-seeded fallback (conftest): without hypothesis the @given
+# properties are skipped but the deterministic threshold/monotonicity
+# tests below still run -- this file used to importorskip everything away.
+from conftest import given, settings, st  # noqa: E402,F401
 
 from repro.core.perf_model import (FPGACostModel, Primitive, TPUCostModel,
                                    predict_output_density)

@@ -1,0 +1,196 @@
+"""Neighbor-sampler properties (DESIGN.md §16, ``data.sampling``).
+
+Each property is a plain checker function; hypothesis drives them with
+arbitrary draws where installed (CI), and seeded parametrized sweeps drive
+the same checkers otherwise (the conftest hypothesis-or-seeded helper).
+Edge cases the random draws can miss -- fanout 0, full fanout, isolated
+seeds, duplicate seeds -- get dedicated deterministic tests.
+"""
+import numpy as np
+import pytest
+
+from conftest import HAVE_HYPOTHESIS, given, settings, st
+from repro.data.sampling import (HostGraph, powerlaw_host_graph,
+                                 sample_subgraph, vertex_seed)
+
+
+def _graph(n, seed, avg_degree=6):
+    return powerlaw_host_graph(n, avg_degree=avg_degree, seed=seed)
+
+
+# -- checkers (shared by hypothesis and the seeded fallback) ----------------
+
+def check_host_graph_valid(n, seed):
+    g = _graph(n, seed)
+    g.validate()
+    # no self loops, per-row sorted unique neighbor lists
+    for v in range(min(n, 64)):
+        nbrs = g.neighbors(v)
+        assert np.all(nbrs != v)
+        assert np.all(np.diff(nbrs) > 0), f"row {v} not sorted-unique"
+    # symmetric: (u, v) present iff (v, u) present
+    flat = set()
+    for v in range(g.n_vertices):
+        for u in g.neighbors(v):
+            flat.add((v, int(u)))
+    assert all((u, v) in flat for v, u in flat)
+    # deterministic under seed
+    g2 = _graph(n, seed)
+    np.testing.assert_array_equal(g.indptr, g2.indptr)
+    np.testing.assert_array_equal(g.indices, g2.indices)
+
+
+def check_sampled_subgraph_valid(graph, seeds, fanouts, seed):
+    """Vertex-induced and valid: the local->global map is injective and in
+    range, seeds hold the first local slots, the hop lists partition the
+    vertex set under the per-hop fanout bound, and the dense adjacency is
+    EXACTLY the host graph's restriction to the sampled vertices (0/1,
+    symmetric, no duplicate edges by construction)."""
+    sub = sample_subgraph(graph, seeds, fanouts, seed=seed)
+    uniq = list(dict.fromkeys(int(v) for v in seeds))
+    k = sub.n_vertices
+    assert len(np.unique(sub.vertices)) == k, "local->global not injective"
+    assert sub.vertices.min() >= 0 and sub.vertices.max() < graph.n_vertices
+    np.testing.assert_array_equal(sub.vertices[: len(uniq)], uniq)
+    assert sub.n_seeds == len(uniq)
+    # hops partition the vertex set; each hop respects the fanout bound
+    assert len(sub.hops) == len(tuple(fanouts)) + 1
+    np.testing.assert_array_equal(np.sort(np.concatenate(sub.hops)),
+                                  np.sort(sub.vertices))
+    for h, f in enumerate(tuple(fanouts)):
+        assert len(sub.hops[h + 1]) <= len(sub.hops[h]) * int(f), (
+            f"hop {h + 1} exceeds fanout bound")
+    # induced adjacency == the host restriction, entry for entry
+    local = {int(v): i for i, v in enumerate(sub.vertices)}
+    want = np.zeros((k, k), np.float32)
+    for i, v in enumerate(sub.vertices):
+        for u in graph.neighbors(int(v)):
+            j = local.get(int(u))
+            if j is not None:
+                want[i, j] = 1.0
+    np.testing.assert_array_equal(sub.adjacency, want)
+    np.testing.assert_array_equal(sub.adjacency, sub.adjacency.T)
+    assert set(np.unique(sub.adjacency)) <= {0.0, 1.0}
+    return sub
+
+
+def check_deterministic_under_seed(graph, seeds, fanouts, seed):
+    a = sample_subgraph(graph, seeds, fanouts, seed=seed)
+    b = sample_subgraph(graph, seeds, fanouts, seed=seed)
+    np.testing.assert_array_equal(a.vertices, b.vertices)
+    np.testing.assert_array_equal(a.adjacency, b.adjacency)
+    for ha, hb in zip(a.hops, b.hops):
+        np.testing.assert_array_equal(ha, hb)
+
+
+# -- seeded sweeps (always run) ---------------------------------------------
+
+@pytest.mark.parametrize("n,seed", [(50, 0), (200, 1), (500, 2)])
+def test_host_graph_valid_sweep(n, seed):
+    check_host_graph_valid(n, seed)
+
+
+@pytest.mark.parametrize("case", range(8))
+def test_sampled_subgraph_valid_sweep(case):
+    rng = np.random.default_rng(case)
+    g = _graph(int(rng.integers(40, 400)), case)
+    n_seeds = int(rng.integers(1, 5))
+    seeds = rng.integers(0, g.n_vertices, size=n_seeds).tolist()
+    fanouts = tuple(int(f) for f in
+                    rng.integers(0, 6, size=int(rng.integers(1, 4))))
+    check_sampled_subgraph_valid(g, seeds, fanouts, int(rng.integers(1000)))
+    check_deterministic_under_seed(g, seeds, fanouts,
+                                   int(rng.integers(1000)))
+
+
+# -- deterministic edge cases -----------------------------------------------
+
+def test_fanout_zero_is_seeds_only():
+    g = _graph(100, 3)
+    for fanouts in ((), (0,), (0, 0)):
+        sub = sample_subgraph(g, [7, 3, 11], fanouts, seed=5)
+        np.testing.assert_array_equal(sub.vertices, [7, 3, 11])
+        check_sampled_subgraph_valid(g, [7, 3, 11], fanouts, 5)
+
+
+def test_full_fanout_is_exact_neighborhood_and_seed_independent():
+    """A fanout >= the max degree takes the whole h-hop neighborhood --
+    bitwise identical whatever the sampling seed (full rows consume no
+    randomness)."""
+    g = _graph(120, 4)
+    f = int(g.degrees.max())
+    seeds = [int(np.argmax(g.degrees))]          # the biggest hub
+    a = sample_subgraph(g, seeds, (f, f), seed=0)
+    b = sample_subgraph(g, seeds, (f, f), seed=12345)
+    np.testing.assert_array_equal(a.vertices, b.vertices)
+    np.testing.assert_array_equal(a.adjacency, b.adjacency)
+    # BFS oracle: exactly the vertices within 2 hops
+    want = set(seeds)
+    frontier = set(seeds)
+    for _ in range(2):
+        nxt = set()
+        for v in frontier:
+            nxt |= {int(u) for u in g.neighbors(v)}
+        frontier = nxt - want
+        want |= nxt
+    assert set(int(v) for v in a.vertices) == want
+
+
+def test_duplicate_seeds_deduplicate():
+    g = _graph(80, 6)
+    sub = sample_subgraph(g, [5, 5, 9, 5], (2,), seed=1)
+    assert sub.n_seeds == 2
+    np.testing.assert_array_equal(sub.vertices[:2], [5, 9])
+
+
+def test_isolated_seed_is_fine():
+    """A degree-0 vertex samples to a 1-vertex, 0-edge subgraph."""
+    g = HostGraph(indptr=np.array([0, 1, 2, 2], np.int64),
+                  indices=np.array([1, 0], np.int64)).validate()
+    sub = sample_subgraph(g, [2], (4, 4), seed=0)
+    assert sub.n_vertices == 1
+    np.testing.assert_array_equal(sub.adjacency, np.zeros((1, 1)))
+
+
+def test_sampler_rejects_bad_input():
+    g = _graph(50, 0)
+    with pytest.raises(ValueError):
+        sample_subgraph(g, [], (2,))
+    with pytest.raises(ValueError):
+        sample_subgraph(g, [50], (2,))
+    with pytest.raises(ValueError):
+        sample_subgraph(g, [-1], (2,))
+    with pytest.raises(ValueError):
+        sample_subgraph(g, [0], (-1,))
+    with pytest.raises(ValueError):
+        powerlaw_host_graph(1)
+
+
+def test_vertex_seed_is_stable_and_distinct():
+    """The derived per-vertex seed is process-stable (crc32, not salted
+    hash) and separates vertices -- the exact-cache contract's anchor."""
+    assert vertex_seed(3, 17) == vertex_seed(3, 17)
+    seeds = {vertex_seed(0, v) for v in range(2048)}
+    assert len(seeds) > 2000            # crc32 collisions are rare
+
+
+# -- hypothesis drivers (CI; skipped where hypothesis is absent) ------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(40, 300), seed=st.integers(0, 2**16))
+    def test_host_graph_valid_property(n, seed):
+        check_host_graph_valid(n, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(40, 300), gseed=st.integers(0, 2**8),
+           n_seeds=st.integers(1, 4),
+           fanouts=st.lists(st.integers(0, 6), min_size=1, max_size=3),
+           seed=st.integers(0, 2**16))
+    def test_sampled_subgraph_property(n, gseed, n_seeds, fanouts, seed):
+        g = _graph(n, gseed)
+        rng = np.random.default_rng(seed)
+        seeds = rng.integers(0, g.n_vertices, size=n_seeds).tolist()
+        check_sampled_subgraph_valid(g, seeds, tuple(fanouts), seed)
+        check_deterministic_under_seed(g, seeds, tuple(fanouts), seed)

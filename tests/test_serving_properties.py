@@ -21,11 +21,7 @@ import pytest
 from repro.data import graphs as graph_data
 from repro.serving.graph_engine import GraphRequest, GraphServeEngine
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from conftest import HAVE_HYPOTHESIS, given, settings, st
 
 F_IN = 16
 

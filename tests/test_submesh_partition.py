@@ -32,11 +32,7 @@ import pytest
 from repro.distributed import sharding
 from repro.serving.scheduler import plan_groups
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from conftest import HAVE_HYPOTHESIS, given, settings, st
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

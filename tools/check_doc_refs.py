@@ -79,6 +79,15 @@ PUBLIC = [
     ("repro.models.gnn", ["build_dense", "build_sim", "GNN_MODELS",
                           "init_spec_weights"]),
     ("repro.data.graphs", ["normalize_adjacency", "materialize"]),
+    # the giant-graph mini-batch surface (DESIGN 16 / README "Mini-batch
+    # serving over a giant graph")
+    ("repro.data.sampling", ["HostGraph", "SampledSubgraph",
+                             "sample_subgraph", "powerlaw_host_graph",
+                             "vertex_seed"]),
+    ("repro.serving.minibatch", ["FeatureStore", "VertexCache",
+                                 "CacheStats", "SeedRequest",
+                                 "MiniBatchPlanner", "MiniBatchServeEngine",
+                                 "QueryTicket"]),
 ]
 
 # bound methods the docs name explicitly (an attribute rename must break
@@ -90,9 +99,15 @@ PUBLIC_ATTRS = [
      ["serve", "run_naive", "bucket_for", "cut_wave", "dispatch_wave",
       "begin_wave", "finish_wave", "request_cost"]),
     ("repro.serving.scheduler", "ContinuousGraphServer",
-     ["submit", "poll", "drain", "warmup", "wait_bound", "lane_estimate",
-      "group_estimate", "from_config", "backlog_bound",
+     ["submit", "submit_query", "poll", "drain", "warmup", "wait_bound",
+      "lane_estimate", "group_estimate", "from_config", "backlog_bound",
       "admission_estimate"]),
+    ("repro.serving.minibatch", "MiniBatchServeEngine",
+     ["serve_queries", "oracle_queries", "report"]),
+    ("repro.serving.minibatch", "FeatureStore",
+     ["gather", "gather_into", "update", "add_listener"]),
+    ("repro.serving.minibatch", "VertexCache",
+     ["get", "put", "invalidate"]),
     ("repro.serving.graph_engine", "GraphServeEngine", ["from_config"]),
     ("repro.core.scheduler", "schedule_weighted", []),
     ("repro.core.perf_model", "CostCalibration", ["observe", "seconds"]),
