@@ -247,6 +247,89 @@ def run_formats(*, smoke: bool = False, write_json: bool = True) -> list:
     return rows
 
 
+def _gat_oracle(compiled, tensors):
+    """Independent float64 NumPy forward pass for GAT: dense matmuls plus
+    an explicit masked edge-softmax (the ``_dense_oracle`` twin for models
+    with ATTENTION kernels, which that walk cannot execute)."""
+    env = {name: np.asarray(v, np.float64) for name, v in tensors.items()}
+    for k in compiled.graph.topo_order():
+        if k.kernel_type == KernelType.ATTENTION:
+            z = env[k.rhs]
+            s = z @ env[k.att_src] + (z @ env[k.att_dst]).T
+            s = np.where(s >= 0, s, k.att_slope * s)
+            sup = env[k.lhs] != 0
+            s = np.where(sup, s, -np.inf)
+            rm = s.max(axis=1, keepdims=True, initial=-np.inf)
+            rm = np.where(np.isfinite(rm), rm, 0.0)
+            ex = np.where(sup, np.exp(s - rm), 0.0)
+            alpha = ex / np.maximum(ex.sum(axis=1, keepdims=True), 1e-30)
+            env[k.out] = np.where(alpha > k.att_threshold, alpha, 0.0)
+            continue
+        if k.kernel_type == KernelType.AGGREGATE and k.lhs == "A":
+            x = env["A" if k.agg_op == AggOp.SUM else "A_mean"]
+        else:
+            x = env[k.lhs]
+        out = x @ env[k.rhs]
+        if k.epilogue_add is not None:
+            out = out + env[k.epilogue_add] * k.epilogue_scale
+        if k.activation_enabled:
+            if k.activation == Activation.RELU:
+                out = np.maximum(out, 0.0)
+            elif k.activation == Activation.PRELU:
+                out = np.where(out >= 0, out, 0.25 * out)
+        env[k.out] = out
+    return env[compiled.graph.kernels[-1].out]
+
+
+def run_gat(*, smoke: bool = False, write_json: bool = True,
+            repeats: int = 3) -> list:
+    """GAT row (DESIGN.md §17): dynamic attention sparsity through both
+    engines -- per-kernel vs fused wall clocks, BITWISE fused parity, an
+    independent float64 oracle check, and the per-head plan evidence (each
+    head's aggregate planned from that head's thresholded attention
+    profile)."""
+    b = gnn_models.build_dense("gat", "CO", scale=0.12, seed=2)
+    last = b.compiled.graph.kernels[-1].out
+    per_eng = runtime.DynasparseEngine()
+    fused_eng = runtime.FusedModelExecutor()
+    per_s, fused_s = _time_paired(
+        [lambda: per_eng.run(b.compiled, b.tensors)[0][last],
+         lambda: fused_eng.run(b.compiled, b.tensors)[0][last]], repeats)
+    probe = runtime.FusedModelExecutor(keep_codes=True)
+    env_f, _ = probe.run(b.compiled, b.tensors)
+    env_p, _ = runtime.DynasparseEngine(keep_codes=True).run(
+        b.compiled, b.tensors)
+    bitwise = bool(np.array_equal(np.asarray(env_p[last]),
+                                  np.asarray(env_f[last])))
+    oracle = _gat_oracle(b.compiled, b.tensors)
+    oracle_ok = bool(np.allclose(np.asarray(env_f[last]), oracle,
+                                 atol=3e-4, rtol=3e-4))
+    heads = {k.out: probe.planned_codes[k.out]
+             for k in b.compiled.graph.kernels
+             if k.kernel_type == KernelType.AGGREGATE and k.lhs != "A"}
+    hist = {out: {p.name: int((codes == int(p)).sum())
+                  for p in Primitive}
+            for out, codes in heads.items()}
+    l1 = sorted(h for h in heads if h in ("G1h1", "H1"))
+    distinct = (len(l1) == 2
+                and not np.array_equal(heads[l1[0]], heads[l1[1]]))
+    row = {
+        "model": "gat", "dataset": "CO", "scale": 0.12,
+        "per_kernel_s": per_s, "fused_s": fused_s,
+        "fused_vs_per_kernel_speedup": (per_s / fused_s if fused_s > 0
+                                        else float("inf")),
+        "bitwise_parity": bitwise, "oracle_ok": oracle_ok,
+        "per_head_plan_histograms": hist,
+        "layer1_head_plans_distinct": bool(distinct),
+    }
+    emit("engine.gat.CO", fused_s * 1e6,
+         f"per-kernel={per_s*1e6:.0f}us bitwise={bitwise} "
+         f"oracle={oracle_ok} heads_distinct={distinct}")
+    if write_json:
+        _merge_json({"gat_rows": [row]})
+    return [row]
+
+
 def run(fast: bool = True, *, smoke: bool = False,
         write_json: bool = True) -> list:
     if smoke:
@@ -315,12 +398,24 @@ if __name__ == "__main__":
                          "(row-CSR vs block path); with --smoke it gates "
                          "on parity AND row-CSR winning at the sparsest "
                          "point")
+    ap.add_argument("--gat", action="store_true",
+                    help="run ONLY the GAT attention row; with --smoke it "
+                         "gates on bitwise fused-vs-per-kernel parity and "
+                         "the independent float64 oracle")
     ap.add_argument("--tol", type=float, default=1.15,
                     help="smoke gate: fail if fused > tol * per-kernel. "
                          "The default suits a quiet machine; CI's shared "
                          "runners pass a looser value that still catches "
                          "the do-more-work class of regression")
     args = ap.parse_args()
+    if args.gat:
+        gat_rows = run_gat(smoke=args.smoke, write_json=not args.smoke)
+        if args.smoke:
+            bad = [r for r in gat_rows
+                   if not (r["bitwise_parity"] and r["oracle_ok"])]
+            if bad:
+                sys.exit(f"gat parity gate failed: {bad}")
+        sys.exit(0)
     if args.formats:
         fmt_rows = run_formats(smoke=args.smoke, write_json=not args.smoke)
         if args.smoke:

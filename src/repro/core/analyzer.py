@@ -117,6 +117,45 @@ def plan_codes_from_profiles(
     return codes, dens_x, dens_y
 
 
+def delta_replan_mask(
+    strategy: str,
+    old_dens_x: np.ndarray,       # (I, K) lhs block densities before delta
+    new_dens_x: np.ndarray,       # (I, K) lhs block densities after delta
+    dens_y: np.ndarray,           # (K, J) rhs block densities (unchanged)
+    model: CostModel,
+    *,
+    touched: Optional[np.ndarray] = None,   # (I, K) bool: cells to examine
+    kernel_type: Optional[KernelType] = None,
+) -> np.ndarray:
+    """Which lhs cells a streaming graph delta forces to REPLAN.
+
+    Returns the (I, K) bool mask of lhs blocks whose K2P decision against
+    at least one rhs block CHANGED between the old and new densities --
+    i.e. the density moved across a primitive boundary (SKIP/GEMM/SpDMM/
+    SpMM).  Exactness argument: ``plan_codes`` is a pure function of the
+    density pair, so a cell whose density did not change (or changed
+    without crossing a boundary) keeps its exact old plan; re-``select``-ing
+    ONLY the ``touched`` cells (the incremental profile patch's touched
+    mask, ``data.sampling.AdjacencyBlockProfile.apply_delta``) therefore
+    reproduces the diff of two full replans, in O(touched * J) instead of
+    O(I * J * K) work.  Static strategies never consult densities, so their
+    mask is empty (their plans cannot move).
+    """
+    old = np.asarray(old_dens_x)
+    new = np.asarray(new_dens_x)
+    if touched is None:
+        touched = old != new
+    out = np.zeros(old.shape, bool)
+    if strategy != "dynamic" or not np.any(touched):
+        return out
+    ti, tk = np.nonzero(touched)
+    ay = np.asarray(dens_y)[tk, :]                       # (t, J)
+    c_old = np.asarray(model.select_traced(old[ti, tk][:, None], ay))
+    c_new = np.asarray(model.select_traced(new[ti, tk][:, None], ay))
+    out[ti, tk] = np.any(c_old != c_new, axis=1)
+    return out
+
+
 def plan_format(
     strategy: str,
     dens_x: jnp.ndarray,          # (I, K) block densities of X

@@ -34,12 +34,19 @@ class GraphMeta:
 class GNNModelSpec:
     """User-level model definition (the paper takes PyG specs; we take this)."""
 
-    model: str                       # gcn | sage | gin | sgc
+    model: str                       # gcn | sage | gin | sgc | gat
     layer_dims: List[int]            # [f_in, hidden, ..., f_out]
     agg_op: AggOp = AggOp.SUM
     activation: Activation = Activation.RELU
     sgc_hops: int = 2                # K for SGC
     gin_eps: float = 0.0
+    # GAT only (DESIGN.md §17).  Heads are summed (not concatenated) so
+    # ``layer_dims`` keeps its meaning; the threshold is the post-softmax
+    # cutoff below which an attention weight is dropped to exactly zero,
+    # which is what makes each head's operand density input-dependent.
+    gat_heads: int = 2
+    att_slope: float = 0.2
+    att_threshold: float = 0.02
 
     @property
     def n_layers(self) -> int:
@@ -72,7 +79,7 @@ def _upd(layer: int, f_in: int, f_out: int, meta: GraphMeta, src: str,
 
 
 def build_computation_graph(spec: GNNModelSpec, meta: GraphMeta) -> ComputationGraph:
-    """Fig. 10: per-layer kernel IRs for GCN / GraphSAGE / GIN / SGC.
+    """Fig. 10: per-layer kernel IRs for GCN / GraphSAGE / GIN / SGC / GAT.
 
     Kernel ordering inside a GCN layer follows the cheaper association:
     when f_in > f_out we transform first (Update -> Aggregate) -- the paper's
@@ -110,6 +117,33 @@ def build_computation_graph(spec: GNNModelSpec, meta: GraphMeta) -> ComputationG
                            act, act_on=True))
             ks.append(_upd(l, f_out, f_out, meta, f"M{l}", f"Wb{l}", f"H{l}",
                            act, act_on=not last))
+        elif model == "gat":
+            # Per head h: Z = h W_h (Update); T = edge-softmax over the
+            # adjacency support with per-head scores, thresholded
+            # (Attention); out = T Z (Aggregate).  Heads are summed via the
+            # epilogue-add chain; the last head applies the activation and
+            # writes H{l}.  Each head's T has its own runtime density, so
+            # the fused walk plans a distinct (primitive, format) grid per
+            # head from the propagated writeback profiles (DESIGN.md §17).
+            prev = None
+            for hd in range(1, spec.gat_heads + 1):
+                z, t = f"Z{l}h{hd}", f"T{l}h{hd}"
+                ks.append(_upd(l, f_in, f_out, meta, h, f"Wg{l}h{hd}", z))
+                ks.append(KernelIR(
+                    KernelType.ATTENTION, l, f_out, f_out, meta.n_vertices,
+                    meta.n_edges, name=f"l{l}.att.h{hd}", lhs="A", rhs=z,
+                    out=t, att_src=f"a_src{l}h{hd}", att_dst=f"a_dst{l}h{hd}",
+                    att_slope=spec.att_slope,
+                    att_threshold=spec.att_threshold))
+                last_head = hd == spec.gat_heads
+                dst = f"H{l}" if last_head else f"G{l}h{hd}"
+                ks.append(KernelIR(
+                    KernelType.AGGREGATE, l, f_out, f_out, meta.n_vertices,
+                    meta.n_edges, agg_op=AggOp.SUM,
+                    activation=act, activation_enabled=last_head and not last,
+                    name=f"l{l}.agg.h{hd}", lhs=t, rhs=z, out=dst,
+                    epilogue_add=prev))
+                prev = dst
         elif model == "sgc":
             # SGC collapses to A^K H W with no inter-hop nonlinearity;
             # emitted as K Aggregates (first layer only) + one Update.

@@ -304,3 +304,81 @@ def dynasparse_dense_equivalent(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """Oracle: the dispatch NEVER changes the value, only the cost."""
     return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)).astype(
         jnp.promote_types(x.dtype, y.dtype))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("slope", "threshold", "out_block"))
+def attention_adjacency(
+    a: jnp.ndarray,
+    z: jnp.ndarray,
+    att_src: jnp.ndarray,
+    att_dst: jnp.ndarray,
+    *,
+    slope: float = 0.2,
+    threshold: float = 0.0,
+    out_block: Tuple[int, int] = (128, 128),
+) -> DynasparseResult:
+    """Thresholded masked edge-softmax over the adjacency support (GAT).
+
+    The one attention implementation BOTH engines execute (DESIGN.md §17)
+    -- ``DynasparseEngine`` dispatches it standalone, the fused walk
+    inlines it -- which is what keeps fused-vs-per-kernel outputs bitwise
+    identical for GAT just like ``dynasparse_matmul`` does for the matmul
+    kernels.
+
+    * ``a`` is the (n, n) normalized adjacency; only its nonzero SUPPORT
+      matters (scores are computed fresh, the mask restricts softmax to
+      edges + self loops).  All-zero rows -- bucket padding vertices, or
+      dummy wave slots whose whole adjacency is zero -- produce exactly
+      zero output rows, so padding profiles to density 0 and plans to
+      SKIP downstream, same as every other kernel.
+    * ``z = H @ W_h`` is the head's (n, f) transformed features;
+      ``att_src``/``att_dst`` are its (f, 1) attention vectors:
+      ``score_ij = LeakyReLU(att_src . z_i + att_dst . z_j, slope)``.
+    * after the numerically-stable masked softmax, weights ``<= threshold``
+      are dropped to exactly zero.  Rows sum to 1 before thresholding, so
+      a head whose attention concentrates keeps few edges and a diffuse
+      head keeps many -- per-head, per-input operand density, the thing
+      the K2P planner cannot know until runtime.
+
+    Returns a :class:`DynasparseResult` so the side-output plumbing
+    (writeback counts chained into the consumer's planner, report
+    bookkeeping) is shared with the matmul kernels.  ``codes`` is the
+    degenerate one-dense-task grid -- attention is not a blocked matmul;
+    its cost is modeled as a single dense task -- and the interesting
+    planning happens downstream, where the consumer Aggregate plans
+    per-block primitives from THIS kernel's writeback profile.
+    """
+    m = a.shape[0]
+    out_dtype = jnp.promote_types(a.dtype, z.dtype)
+    support = a != 0
+    # barrier: scores must be computed against the MATERIALIZED z.  Without
+    # it, the fused whole-model program (where z's producing Update matmul
+    # is in the same trace) may reassociate/refuse the projection against
+    # z's producer -- fewer FLOPs, different rounding -- and the engines
+    # stop being bitwise equal.  The two (f,) projections are one stacked
+    # (n, f) x (f, 2) dot for the same reason: a single-column dot gets
+    # rewritten to a context-dependent reduction, the 2-column one compiles
+    # to the same stable contraction in both programs.
+    zf = jax.lax.optimization_barrier(z.astype(jnp.float32))
+    att = jnp.concatenate([att_src, att_dst], axis=1).astype(jnp.float32)
+    s = jnp.dot(zf, att, preferred_element_type=jnp.float32)  # (n, 2)
+    scores = s[:, :1] + s[:, 1:2].T
+    scores = jnp.where(scores >= 0, scores, slope * scores)
+    # stable masked softmax; empty rows (no support) resolve to all-zero
+    # instead of NaN: their max is substituted with 0 and every entry is
+    # masked out of the numerator, so 0 / 1 = 0.
+    row_max = jnp.max(jnp.where(support, scores, -jnp.inf),
+                      axis=1, keepdims=True)
+    row_max = jnp.where(jnp.isfinite(row_max), row_max, 0.0)
+    ex = jnp.where(support, jnp.exp(scores - row_max), 0.0)
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-30)
+    alpha = ex / denom
+    alpha = jnp.where(alpha > threshold, alpha, 0.0).astype(out_dtype)
+
+    out_counts = profiler.block_counts(alpha, out_block)
+    out_density = profiler.density_from_counts(out_counts, m, m, *out_block)
+    one = jnp.ones((1, 1), jnp.float32)
+    codes = jnp.full((1, 1, 1), Primitive.GEMM, jnp.int32)
+    return DynasparseResult(alpha, codes, one, one, out_density, out_counts,
+                            jnp.zeros((), jnp.int32))

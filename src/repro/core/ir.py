@@ -18,6 +18,12 @@ class KernelType(enum.IntEnum):
     # element-wise epilogues are folded into the producing kernel (the FPGA
     # applies activation on the writeback path); kept for IR completeness:
     ELEMENTWISE = 2
+    # masked edge-softmax over the adjacency support (GAT, DESIGN.md §17):
+    # produces a (|V|, |V|) attention matrix whose sparsity is input- and
+    # head-dependent -- the operand whose density the K2P planner cannot
+    # know until runtime.  Not a matmul: executed by a dedicated traced
+    # function (``dynasparse.attention_adjacency``) in both engines.
+    ATTENTION = 3
 
 
 class AggOp(enum.Enum):
@@ -69,12 +75,21 @@ class KernelIR:
     # extra epilogue: residual add (GIN's (1+eps)h + agg, SAGE self path)
     epilogue_add: Optional[str] = None
     epilogue_scale: float = 1.0
+    # ATTENTION kernels only: names of the per-head attention weight
+    # vectors (score_ij = LeakyReLU(a_src . z_i + a_dst . z_j)), the
+    # LeakyReLU negative slope, and the post-softmax absolute threshold
+    # below which an attention weight is dropped to exactly zero (what
+    # makes the head's effective operand density input-dependent).
+    att_src: Optional[str] = None
+    att_dst: Optional[str] = None
+    att_slope: float = 0.2
+    att_threshold: float = 0.0
     scheme: ExecutionScheme = dataclasses.field(default_factory=ExecutionScheme)
 
     @property
     def matmul_dims(self) -> Tuple[int, int, int]:
         """(m, n, d) of the underlying matrix product."""
-        if self.kernel_type == KernelType.AGGREGATE:
+        if self.kernel_type in (KernelType.AGGREGATE, KernelType.ATTENTION):
             return (self.n_vertices, self.n_vertices, self.f_in)
         return (self.n_vertices, self.f_in, self.f_out)
 
@@ -84,9 +99,11 @@ class KernelIR:
 
         Aggregate (Alg. 2): A blocks N1xN1 x H fibers N1xN2 -> out N1xN2.
         Update   (Alg. 3): H subfibers N2xN2 x W blocks N2xN2 -> out N2xN2.
+        Attention:          the (|V|, |V|) output is planned/profiled at the
+        adjacency granularity N1xN1 (its scores read N2-wide features).
         """
         s = self.scheme
-        if self.kernel_type == KernelType.AGGREGATE:
+        if self.kernel_type in (KernelType.AGGREGATE, KernelType.ATTENTION):
             return (s.n1, s.n1, s.n2)
         return (s.n2, s.n2, s.n2)
 
@@ -118,6 +135,13 @@ class OperandFlow:
     producer: Optional[int]          # kernel index writing it; None = input
     block: Tuple[int, int]           # (rows, cols) consumer granularity
     pool_rows: int                   # row-pool factor from (N2, N2) profile
+    # column-pool factor from the (N2, N2) profile.  1 for every feature
+    # operand (they are N2 columns wide already); > 1 only for a produced
+    # square operand consumed at the (N1, N1) adjacency granularity -- the
+    # GAT attention matrix feeding its Aggregate (DESIGN.md §17).  Exact
+    # for the same reason pool_rows is: counts are integers, so a two-axis
+    # block sum is bitwise equal to profiling the tensor directly.
+    pool_cols: int = 1
 
 
 @dataclasses.dataclass
@@ -146,11 +170,14 @@ class ComputationGraph:
         """Per-kernel (lhs_flow, rhs_flow): the density-propagation wiring.
 
         Requires partitioning to have run (``scheme.n1``/``n2`` set).  For a
-        produced operand the consumer granularity must be a row-multiple of
-        the producer's (N2, N2) writeback profile with matching columns --
+        produced operand the consumer granularity must be a block-multiple
+        (rows AND columns) of the producer's (N2, N2) writeback profile --
         guaranteed by Algorithm 9 (N1 and N2 are power-of-two multiples of
-        the alignment with N1 >= N2) and asserted here so a future scheme
-        change fails loudly instead of silently mis-planning.
+        the alignment with N1 >= N2, so N2 divides N1 on both axes) and
+        asserted here so a future scheme change fails loudly instead of
+        silently mis-planning.  Feature operands pool rows only
+        (``pool_cols == 1``); the GAT attention matrix consumed at
+        (N1, N1) pools both axes.
         """
         produced: Dict[str, int] = {}
         flows: List[Tuple[OperandFlow, OperandFlow]] = []
@@ -160,14 +187,15 @@ class ComputationGraph:
             pair = []
             for name, blk in ((k.lhs, (bm, bk)), (k.rhs, (bk, bn))):
                 prod = produced.get(name)
-                pool = 1
+                pool = cpool = 1
                 if prod is not None:
-                    assert blk[1] == n2 and blk[0] % n2 == 0, (
+                    assert blk[0] % n2 == 0 and blk[1] % n2 == 0, (
                         f"kernel {k.name}: operand {name} consumed at {blk} "
                         f"cannot chain from the (N2={n2}, N2) profile")
-                    pool = blk[0] // n2
+                    pool, cpool = blk[0] // n2, blk[1] // n2
                 pair.append(OperandFlow(source=name, producer=prod,
-                                        block=blk, pool_rows=pool))
+                                        block=blk, pool_rows=pool,
+                                        pool_cols=cpool))
             flows.append((pair[0], pair[1]))
             produced[k.out] = i
         return flows

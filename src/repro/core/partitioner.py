@@ -87,7 +87,7 @@ def apply_partitioning(graph: ComputationGraph, cfg: PartitionConfig) -> None:
     """Fill each kernel's ExecutionScheme (Algorithms 2/3 task grids)."""
     for k in graph.kernels:
         m, n, d = k.matmul_dims
-        if k.kernel_type == KernelType.AGGREGATE:
+        if k.kernel_type in (KernelType.AGGREGATE, KernelType.ATTENTION):
             gi = _ceil_div(m, cfg.n1)
             gj = _ceil_div(n, cfg.n1)
             gk = _ceil_div(d, cfg.n2)

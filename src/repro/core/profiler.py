@@ -164,6 +164,26 @@ class BlockProfile:
         return BlockProfile(pooled, self.shape,
                             (self.block[0] * r, self.block[1]))
 
+    def pool_cols(self, r: int) -> "BlockProfile":
+        """Merge ``r`` column blocks at a time: (bm, N2) -> (bm, r*N2).
+
+        The column-axis twin of :meth:`pool_rows`, exact for the same
+        reason (integer sums; zero-padded tail blocks add nothing).  Used
+        by the GAT Aggregate, whose produced (|V|, |V|) attention operand
+        is consumed at the (N1, N1) adjacency granularity -- both axes of
+        the (N2, N2) writeback profile pool up (DESIGN.md §17).
+        """
+        if r <= 1:
+            return self
+        c = self.counts
+        pad = (-c.shape[1]) % r
+        if pad:
+            c = jnp.concatenate(
+                [c, jnp.zeros((c.shape[0], pad), c.dtype)], axis=1)
+        pooled = c.reshape(c.shape[0], -1, r).sum(axis=2)
+        return BlockProfile(pooled, self.shape,
+                            (self.block[0], self.block[1] * r))
+
 
 @dataclasses.dataclass
 class SparsityStats:

@@ -45,8 +45,8 @@ from repro.core import analyzer, profiler, scheduler
 from repro.core import formats as _formats
 from repro.distributed import sharding as dist_sharding
 from repro.core.compiler import CompiledModel
-from repro.core.dynasparse import (DynasparseResult, dynasparse_matmul,
-                                   ell_when)
+from repro.core.dynasparse import (DynasparseResult, attention_adjacency,
+                                   dynasparse_matmul, ell_when)
 from repro.core.ir import Activation, AggOp, KernelIR, KernelType
 from repro.core.perf_model import FPGACostModel, Format
 from repro.core.profiler import SparsityStats
@@ -187,6 +187,11 @@ def propagate_stats(
     """
     env = dict(static_stats)
     for k in compiled.graph.topo_order():
+        if k.kernel_type == KernelType.ATTENTION:
+            raise NotImplementedError(
+                "attention kernels have no density-space model (their "
+                "operand density is input-dependent by construction); GAT "
+                "runs only through the real-numerics engines")
         dx, dy = _operand_block_densities(k, env)
         _, bk, _ = k.block_dims
         # out block (i, j): 1 - prod_k (1 - dx[i,k] dy[k,j])^bk
@@ -275,6 +280,10 @@ def simulate_inference(
     n_cc = n_cc or compiled.partition.n_cc
     reports = []
     for k in compiled.graph.topo_order():
+        if k.kernel_type == KernelType.ATTENTION:
+            raise NotImplementedError(
+                "attention kernels have no density-space cost model; GAT "
+                "runs only through the real-numerics engines")
         dx, dy = _operand_block_densities(k, stats_env)
         codes, costs = analyzer.plan_kernel_host(
             strategy, dx, dy, k.block_dims, model,
@@ -296,7 +305,13 @@ _AGG_PRE = {AggOp.SUM: "A", AggOp.MEAN: "A_mean"}
 
 
 def _agg_lhs_name(k: KernelIR) -> str:
-    """Env name of an Aggregate kernel's adjacency operand (A or A_mean)."""
+    """Env name of an Aggregate kernel's lhs operand.
+
+    The adjacency-shaped lhs "A" rebinds to the normalization the agg op
+    needs (A or A_mean); a PRODUCED lhs (the GAT attention matrix, already
+    edge-softmax-normalized) binds by its own name."""
+    if k.lhs != "A":
+        return k.lhs
     name = _AGG_PRE.get(k.agg_op)
     if name is None:
         raise NotImplementedError(
@@ -456,6 +471,25 @@ class DynasparseEngine:
         else:
             x = env[k.lhs]
         y = env[k.rhs]
+
+        if k.kernel_type == KernelType.ATTENTION:
+            # masked edge-softmax, not a matmul: one shared traced function
+            # (the fused walk calls the identical one, so the produced
+            # attention matrix -- and every plan downstream of its profile
+            # -- is bitwise the same in both engines).
+            n2 = k.scheme.n2
+            res = attention_adjacency(
+                x, y, env[k.att_src], env[k.att_dst],
+                slope=k.att_slope, threshold=k.att_threshold,
+                out_block=(n2, n2))
+            self.profiled_densities[k.out] = res.out_density
+            if self.keep_codes:
+                self.planned_codes[k.out] = np.asarray(res.codes)
+                self.planned_formats[k.out] = int(res.fmt)
+            rep = _bookkeep_kernel(k, res.codes, res.dens_x, res.dens_y,
+                                   n_cc, self.model)
+            return res.out, rep
+
         residual = env[k.epilogue_add] if k.epilogue_add is not None else None
 
         # --- one traced call: profile -> plan -> dispatch -> epilogue ---
@@ -590,7 +624,8 @@ class FusedModelExecutor:
         ks = tuple(
             (k.name, k.kernel_type, k.block_dims, k.scheme.n2, k.lhs, k.rhs,
              k.out, k.agg_op.value, k.epilogue_add, k.epilogue_scale,
-             k.activation.value if k.activation_enabled else "none")
+             k.activation.value if k.activation_enabled else "none",
+             k.att_src, k.att_dst, k.att_slope, k.att_threshold)
             for k in compiled.graph.topo_order())
         return (ks, self._tensor_sig(tensors))
 
@@ -641,8 +676,25 @@ class FusedModelExecutor:
         sides = []
         for k, (fx, fy) in zip(kernels, flows):
             x, y = env[fx.source], env[fy.source]
+            if k.kernel_type == KernelType.ATTENTION:
+                # masked edge-softmax (GAT): no K2P planning of its own --
+                # its whole point is that the OUTPUT density is unknowable
+                # before execution.  The writeback profile it emits is what
+                # the downstream Aggregate plans from, per head.
+                n2a = k.scheme.n2
+                res = attention_adjacency(
+                    x, y, env[k.att_src], env[k.att_dst],
+                    slope=k.att_slope, threshold=k.att_threshold,
+                    out_block=(n2a, n2a))
+                env[k.out] = res.out
+                counts_env[k.out] = profiler.BlockProfile(
+                    res.out_counts, res.out.shape, (n2a, n2a))
+                sides.append((res.codes, res.dens_x, res.dens_y,
+                              res.out_density, res.fmt))
+                continue
             prof_x, prof_y = (
                 counts_env[f.source].pool_rows(f.pool_rows)
+                          .pool_cols(f.pool_cols)
                 if f.producer is not None else profiles[(f.source, f.block)]
                 for f in (fx, fy))
             codes, dens_x, dens_y = analyzer.plan_codes_from_profiles(

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -84,6 +84,152 @@ class HostGraph:
         if indices.size and (indices.min() < 0 or indices.max() >= n):
             raise ValueError(f"neighbor index out of range [0, {n})")
         return self
+
+    def _flat_edges(self) -> np.ndarray:
+        """Sorted flat keys ``u * n + v`` of every directed CSR entry."""
+        n = self.n_vertices
+        u = np.repeat(np.arange(n, dtype=np.int64), self.degrees)
+        return u * n + self.indices
+
+    def apply_delta(self, edge_inserts, edge_deletes
+                    ) -> Tuple["HostGraph", "GraphDelta"]:
+        """Streaming update: returns ``(new_graph, delta)``; self is frozen.
+
+        ``edge_inserts``/``edge_deletes`` are ``(k, 2)``-shaped undirected
+        vertex pairs (any iterable of pairs).  Both are symmetrized,
+        self loops dropped, duplicates collapsed; inserting an existing
+        edge or deleting a missing one is a no-op.  A pair in both lists
+        is an error (the net effect would be order-defined).  The returned
+        :class:`GraphDelta` records only the edges that ACTUALLY changed
+        -- in both CSR directions -- which is what the incremental profile
+        patch (:meth:`AdjacencyBlockProfile.apply_delta`) and the serving
+        cache invalidation (``serving.minibatch``) consume.
+        """
+        n = self.n_vertices
+
+        def _canon(pairs) -> np.ndarray:
+            p = np.asarray(list(pairs), np.int64).reshape(-1, 2)
+            if p.size and (p.min() < 0 or p.max() >= n):
+                raise ValueError(f"delta vertex out of range [0, {n})")
+            p = p[p[:, 0] != p[:, 1]]
+            u = np.concatenate([p[:, 0], p[:, 1]])
+            v = np.concatenate([p[:, 1], p[:, 0]])
+            return np.unique(u * n + v)
+
+        ins, dele = _canon(edge_inserts), _canon(edge_deletes)
+        both = np.intersect1d(ins, dele)
+        if both.size:
+            raise ValueError(
+                f"{both.size // 2} edge(s) appear in both inserts and "
+                f"deletes")
+        cur = self._flat_edges()
+        ins = np.setdiff1d(ins, cur)         # only edges actually new
+        dele = np.intersect1d(dele, cur)     # only edges actually present
+        flat = np.setdiff1d(np.concatenate([cur, ins]), dele)
+        u, v = flat // n, flat % n
+        indptr = np.zeros(n + 1, np.int64)
+        np.add.at(indptr, u + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        new = HostGraph(indptr=indptr, indices=v).validate()
+        delta = GraphDelta(
+            inserted=np.stack([ins // n, ins % n], axis=1),
+            deleted=np.stack([dele // n, dele % n], axis=1))
+        return new, delta
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """The edges a :meth:`HostGraph.apply_delta` call ACTUALLY changed.
+
+    Both arrays are ``(k, 2)`` int64 DIRECTED pairs (each undirected edge
+    appears in both orientations, matching the CSR's storage), already
+    filtered down to real changes: inserts that existed and deletes that
+    did not are gone.  ``touched_vertices`` is the invalidation set for
+    serving caches -- a sampled neighborhood can only have changed if it
+    contains a touched vertex, because the sampler reads nothing but the
+    neighbor rows of the vertices it visits.
+    """
+
+    inserted: np.ndarray             # (k_i, 2) int64 directed pairs
+    deleted: np.ndarray              # (k_d, 2) int64 directed pairs
+
+    @property
+    def n_changed(self) -> int:
+        return int(self.inserted.shape[0] + self.deleted.shape[0])
+
+    @property
+    def touched_vertices(self) -> np.ndarray:
+        """Sorted unique endpoints of every changed edge."""
+        return np.unique(np.concatenate(
+            [self.inserted.reshape(-1), self.deleted.reshape(-1)]))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdjacencyBlockProfile:
+    """Host-side block-sparsity profile of a :class:`HostGraph`'s structure.
+
+    ``counts[i, j]`` is the number of directed CSR edges landing in block
+    ``(i, j)`` of the (|V|, |V|) 0/1 adjacency STRUCTURE (no self loops,
+    no normalization -- the raw support whose density drives K2P planning).
+    The point of the class is :meth:`apply_delta`: a streaming edge update
+    patches ONLY the touched cells (``np.add.at`` over the changed edges'
+    block coordinates), bitwise equal to re-profiling the mutated graph
+    from scratch -- integer counts, same sums in a different order
+    (DESIGN.md §17).
+    """
+
+    counts: np.ndarray               # (Mb, Nb) int64
+    shape: Tuple[int, int]           # (|V|, |V|)
+    block: Tuple[int, int]           # (bm, bn)
+
+    @classmethod
+    def from_graph(cls, graph: HostGraph,
+                   block: Tuple[int, int]) -> "AdjacencyBlockProfile":
+        n = graph.n_vertices
+        bm, bn = block
+        mb, nb = -(-n // bm), -(-n // bn)
+        u = np.repeat(np.arange(n, dtype=np.int64), graph.degrees)
+        cells = (u // bm) * nb + graph.indices // bn
+        counts = np.bincount(cells, minlength=mb * nb).reshape(mb, nb)
+        return cls(counts=counts.astype(np.int64), shape=(n, n),
+                   block=(bm, bn))
+
+    def apply_delta(self, delta: GraphDelta
+                    ) -> Tuple["AdjacencyBlockProfile", np.ndarray]:
+        """Patch the profile with a :class:`GraphDelta`.
+
+        Returns ``(new_profile, touched)`` where ``touched`` is the (Mb,
+        Nb) bool mask of cells whose count changed -- the only cells whose
+        K2P decision can have moved, which is what
+        ``analyzer.replan_mask_from_profiles`` narrows its re-``select``
+        to.  O(changed edges), never O(|V|^2 / block^2).
+        """
+        bm, bn = self.block
+        counts = self.counts.copy()
+        touched = np.zeros_like(counts, dtype=bool)
+        for pairs, sign in ((delta.inserted, 1), (delta.deleted, -1)):
+            if pairs.shape[0] == 0:
+                continue
+            bi, bj = pairs[:, 0] // bm, pairs[:, 1] // bn
+            np.add.at(counts, (bi, bj), sign)
+            touched[bi, bj] = True
+        if counts.min(initial=0) < 0:
+            raise ValueError("profile drove a block count negative "
+                             "(delta does not match this profile's graph)")
+        return (AdjacencyBlockProfile(counts=counts, shape=self.shape,
+                                      block=self.block),
+                touched)
+
+    def densities(self) -> np.ndarray:
+        """(Mb, Nb) densities normalized to the unpadded elements in each
+        block (the ``profiler.density_from_counts`` rule, host-side)."""
+        m, n = self.shape
+        bm, bn = self.block
+        mb, nb = self.counts.shape
+        rows = np.clip(m - np.arange(mb) * bm, 0, bm)
+        cols = np.clip(n - np.arange(nb) * bn, 0, bn)
+        sizes = rows[:, None] * cols[None, :]
+        return self.counts / np.maximum(sizes, 1)
 
 
 def powerlaw_host_graph(n_vertices: int, *, avg_degree: int = 8,
@@ -206,12 +352,25 @@ def sample_subgraph(graph: HostGraph, seeds: Sequence[int],
             break
     verts = np.asarray(vertices, np.int64)
     k = verts.shape[0]
+    # vectorized induced-adjacency build (the per-vertex Python loop here
+    # dominated high-fanout sampling): gather every sampled vertex's full
+    # neighbor row in one flat take, then map global neighbor ids to local
+    # slots with a sorted lookup.  Bitwise-identical to the loop -- the
+    # rng is untouched and 0/1 assignment is order-free.
+    starts = graph.indptr[verts]
+    counts = (graph.indptr[verts + 1] - starts).astype(np.int64)
+    total = int(counts.sum())
     adj = np.zeros((k, k), np.float32)
-    for i, v in enumerate(verts):
-        nbrs = graph.neighbors(int(v))
-        for u in nbrs:
-            j = local_of.get(int(u))
-            if j is not None:
-                adj[i, j] = 1.0
+    if total:
+        offs = np.cumsum(counts) - counts          # row start in flat gather
+        idx = (np.arange(total) - np.repeat(offs, counts)
+               + np.repeat(starts, counts))
+        nbrs = graph.indices[idx]
+        rows = np.repeat(np.arange(k), counts)
+        order = np.argsort(verts, kind="stable")
+        sorted_v = verts[order]
+        pos = np.searchsorted(sorted_v, nbrs)
+        valid = (pos < k) & (sorted_v[np.minimum(pos, k - 1)] == nbrs)
+        adj[rows[valid], order[pos[valid]]] = 1.0
     return SampledSubgraph(vertices=verts, adjacency=adj, hops=hops,
                            fanouts=fanouts, seed=int(seed))

@@ -1,4 +1,4 @@
-"""GNN models (GCN / GraphSAGE / GIN / SGC) through the Dynasparse stack.
+"""GNN models (GCN / GraphSAGE / GIN / SGC / GAT) through the Dynasparse stack.
 
 The model IS its IR: ``core.compiler`` turns a ``GNNModelSpec`` + graph meta
 into Aggregate/Update kernels, and either the real-numerics engine
@@ -20,7 +20,7 @@ from repro.core.ir import AggOp, KernelType
 from repro.core.profiler import SparsityStats
 from repro.data import graphs as graph_data
 
-GNN_MODELS = ("gcn", "sage", "gin", "sgc")
+GNN_MODELS = ("gcn", "sage", "gin", "sgc", "gat")
 
 
 def make_model_spec(model: str, f_in: int, hidden: int, n_classes: int
@@ -36,6 +36,18 @@ def _glorot_pruned(kernels, *, seed: int, density: float
     rng = np.random.default_rng(seed)
     out: Dict[str, np.ndarray] = {}
     for k in kernels:
+        if k.kernel_type == KernelType.ATTENTION:
+            # per-head attention vectors (f, 1); glorot, never pruned --
+            # a zeroed entry would statically kill a feature channel's
+            # contribution to every score, which defeats the point of
+            # input-dependent attention sparsity.
+            for name in (k.att_src, k.att_dst):
+                if name in out:
+                    continue
+                lim = np.sqrt(6.0 / (k.f_in + 1))
+                out[name] = rng.uniform(
+                    -lim, lim, size=(k.f_in, 1)).astype(np.float32)
+            continue
         if k.kernel_type != KernelType.UPDATE or k.rhs in out:
             continue
         lim = np.sqrt(6.0 / (k.f_in + k.f_out))
@@ -148,6 +160,11 @@ def build_sim(model: str, dataset: str, *, n_cc: int = 7,
     per-core buffer budget is ~45MB/7 cores.  (The TPU path uses align=128
     and the VMEM budget instead.)
     """
+    if model == "gat":
+        raise NotImplementedError(
+            "gat has no cost-model simulation path: attention sparsity is "
+            "input-dependent, so there is no density to propagate -- use "
+            "the real-numerics engines (build_dense / serving)")
     spec_g = graph_data.TABLE_VI[dataset]
     spec = make_model_spec(model, spec_g.f_in, spec_g.hidden,
                            spec_g.n_classes)

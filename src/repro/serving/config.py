@@ -96,6 +96,52 @@ class EngineConfig:
     default.  ``weights``/``mesh``/``cost_model`` hold live objects --
     equality on those falls back to identity, so round-trip comparisons
     stay well-defined.
+
+    Model block (what gets compiled once per shape bucket):
+
+    * ``f_in`` -- input feature width every admitted request must match.
+    * ``model`` -- spec name from ``models.gnn.GNN_MODELS`` (``"gcn"`` |
+      ``"sage"`` | ``"gin"`` | ``"sgc"`` | ``"gat"``).
+    * ``hidden`` / ``n_classes`` -- layer widths of the served 2-layer
+      model; both must be >= 1.
+    * ``weights`` -- pre-initialized weight dict keyed like
+      ``init_spec_weights`` output; ``None`` initializes fresh ones from
+      ``weight_seed`` at ``weight_density`` (fraction of nonzero weight
+      entries, (0, 1]; 1.0 = dense weights).
+
+    Admission geometry (DESIGN.md section 10):
+
+    * ``slots`` -- wave width: requests batched per dispatch (partial
+      waves are padded with zero dummy slots, so one jit trace per
+      bucket suffices).
+    * ``min_bucket`` -- floor of the bucket ladder: a request lands in
+      the smallest power of two >= max(|V|, min_bucket), so every |V|
+      in (bucket/2, bucket] shares a trace.
+
+    Planner/executor policy (DESIGN.md sections 3-9, 13):
+
+    * ``strategy`` -- primitive-selection strategy passed to the
+      Analyzer (``"dynamic"`` profiles and picks per partition pair;
+      ``"s1"``/``"s2"``/``"gemm"`` are the static baselines).
+    * ``n_cc`` / ``align`` / ``on_chip_bytes`` -- partitioner geometry:
+      compute-core count, row alignment, and the on-chip buffer budget
+      that caps partition size.
+    * ``donate`` -- donate input buffers to the jitted wave executable
+      (saves a copy; inputs are dead after dispatch).
+    * ``collect_report`` -- keep per-kernel ``InferenceReport`` rows
+      (primitive mix, densities) at a small host-sync cost.
+    * ``keep_codes`` -- retain planned primitive codes per kernel on the
+      executor (debugging/bench introspection).
+    * ``format_aware`` -- let the planner pick storage formats (row-CSR
+      vs block-dense) per operand, not just primitives; ``csr_rmax``
+      caps rows-per-block for the native CSR path.
+
+    Placement:
+
+    * ``mesh`` -- a ``jax`` device mesh for sharded wave dispatch
+      (``None`` = single device).
+    * ``cost_model`` -- Analyzer cost model instance (``None`` =
+      ``FPGACostModel()``, the paper's Table-V geometry).
     """
 
     f_in: int
@@ -142,7 +188,32 @@ class EngineConfig:
 class ServeConfig:
     """Every knob :class:`ContinuousGraphServer` is built from.
 
-    The first block is the PR-4/5/7 cutting policy, unchanged defaults.
+    The first block is the PR-4/5/7 cutting policy, unchanged defaults:
+
+    * ``clock`` -- the time source every deadline/arrival is measured on
+      (monotonic seconds; tests inject a fake clock here).
+    * ``ewma_alpha`` -- smoothing factor in (0, 1] for the per-bucket
+      wave-wall estimates that drive deadline slack and lane planning
+      (higher = reacts faster, noisier).
+    * ``cold_start_wall`` -- assumed per-wave wall (seconds) for a
+      bucket with no measurement yet, so the very first deadline
+      comparison is not against zero.
+    * ``slack_margin`` -- a queued request is deadline-URGENT (forces a
+      wave cut) once its remaining slack < ``slack_margin`` x the
+      bucket's estimated wait bound (its wave wall lane-packed against
+      the other queued buckets); > 1 cuts earlier, buying headroom
+      against wall variance.
+    * ``batch_patience`` -- how long the cutter keeps waiting for a
+      fuller wave when nobody is urgent, as a multiple of the estimated
+      wall (lower = favor latency over occupancy).
+    * ``max_wait`` -- hard age bound (seconds): a wave is force-cut once
+      its oldest request has waited this long, deadlines or not.
+    * ``n_lanes`` -- dispatch lanes pulling cut waves (``None`` = one
+      per device of the engine's mesh, 1 when unsharded).
+    * ``resize`` -- switch the lanes to DISJOINT device groups replanned
+      between waves from queue composition (DESIGN.md section 14;
+      requires an engine with a cores mesh).
+
     The second block is the overload-control policy (DESIGN.md section
     15):
 

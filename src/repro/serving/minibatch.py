@@ -49,7 +49,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.data.sampling import (HostGraph, SampledSubgraph, sample_subgraph,
+from repro.core import analyzer
+from repro.core.perf_model import FPGACostModel
+from repro.data.sampling import (AdjacencyBlockProfile, GraphDelta, HostGraph,
+                                 SampledSubgraph, sample_subgraph,
                                  vertex_seed)
 from repro.serving.graph_engine import (GraphRequest, GraphResult,
                                         GraphServeEngine)
@@ -235,6 +238,11 @@ class SeedRequest(GraphRequest):
         self.request_id = int(request_id)
         self._gathered: Optional[np.ndarray] = None
         self.store_version: Optional[int] = None
+        # the planner's graph version this request was SAMPLED under
+        # (stamped by ``MiniBatchPlanner.request_for``): a streaming edge
+        # delta bumps the planner's version, so a result sampled from the
+        # old topology is delivered but never cached.
+        self.graph_version: Optional[int] = None
 
     @property
     def vertex(self) -> int:
@@ -265,6 +273,27 @@ class SeedRequest(GraphRequest):
             self.store_version = self.store.version
 
 
+@dataclasses.dataclass(frozen=True)
+class DeltaReport:
+    """What one streaming edge delta did to a serving deployment
+    (:meth:`MiniBatchPlanner.apply_delta`'s return; DESIGN.md §17).
+
+    ``touched_cells`` counts block-profile cells the incremental patch
+    rewrote; ``replan_cells`` counts the subset whose K2P decision against
+    a dense feature fiber actually CROSSED a primitive boundary -- the only
+    cells a planner has to re-decide (``analyzer.delta_replan_mask``).
+    ``cache_invalidated`` counts hot-vertex entries evicted because a
+    changed edge touched their dependency set.
+    """
+
+    delta: GraphDelta
+    graph_version: int               # the planner's version AFTER the delta
+    cache_invalidated: int
+    touched_cells: int
+    replan_cells: int
+    total_cells: int
+
+
 class MiniBatchPlanner:
     """Sampling + caching policy for one (graph, store, model) deployment.
 
@@ -286,7 +315,9 @@ class MiniBatchPlanner:
     def __init__(self, graph: HostGraph, store: FeatureStore, *,
                  fanouts: Sequence[int] = (8, 4), sample_seed: int = 0,
                  cache: Optional[VertexCache] = None,
-                 model_key: str = "gnn", layer: str = "out"):
+                 model_key: str = "gnn", layer: str = "out",
+                 profile_block: Tuple[int, int] = (128, 128),
+                 strategy: str = "dynamic", cost_model=None):
         self.graph = graph
         self.store = store
         self.fanouts = tuple(int(f) for f in fanouts)
@@ -294,6 +325,18 @@ class MiniBatchPlanner:
         self.cache = cache
         self.model_key = str(model_key)
         self.layer = str(layer)
+        # streaming-delta state (DESIGN.md §17): the graph's block-level
+        # nnz profile is maintained INCREMENTALLY across apply_delta calls
+        # (touched block-rows only, never a full re-profile), and
+        # graph_version gates caching/coalescing the same way the store
+        # version does for feature updates.
+        self.graph_version = 0
+        self.profile_block = (int(profile_block[0]), int(profile_block[1]))
+        self.strategy = str(strategy)
+        self.cost_model = cost_model if cost_model is not None \
+            else FPGACostModel()
+        self.profile = AdjacencyBlockProfile.from_graph(
+            graph, self.profile_block)
         self._next_rid = -2
         self._inflight: Dict[int, SeedRequest] = {}
         if cache is not None:
@@ -317,6 +360,7 @@ class MiniBatchPlanner:
         """A fresh store-backed request for ``vertex`` (tracked in flight
         until :meth:`complete` sees its result)."""
         req = SeedRequest(self.sample(vertex), self.store, self._next_rid)
+        req.graph_version = self.graph_version
         self._next_rid -= 1
         self._inflight[req.request_id] = req
         return req
@@ -324,12 +368,14 @@ class MiniBatchPlanner:
     def complete(self, result: GraphResult) -> Tuple[int, np.ndarray]:
         """Consume a wave result for a planner-issued request: returns
         ``(vertex, row)`` and fills the cache -- unless the store updated
-        after the request gathered, in which case the (valid,
+        after the request gathered (or an edge delta bumped the graph
+        version after it sampled), in which case the (valid,
         snapshot-consistent) row is delivered but NOT cached."""
         req = self._inflight.pop(result.request_id)
         row = np.asarray(result.logits[0])
         if (self.cache is not None
-                and req.store_version == self.store.version):
+                and req.store_version == self.store.version
+                and req.graph_version == self.graph_version):
             self.cache.put(self.cache_key(req.vertex), row,
                            deps=req.subgraph.vertices)
         return req.vertex, row
@@ -343,6 +389,52 @@ class MiniBatchPlanner:
         """The in-flight request behind a planner-issued id, if any (the
         continuous server's coalescing check reads its gather version)."""
         return self._inflight.get(request_id)
+
+    def apply_delta(self, edge_inserts: Sequence = (),
+                    edge_deletes: Sequence = ()) -> DeltaReport:
+        """Stream an edge delta into the deployment (DESIGN.md §17).
+
+        Four incremental moves, no full re-profile and no full replan:
+
+        1. ``HostGraph.apply_delta`` rebuilds the CSR and canonicalizes
+           the delta down to the undirected edges that actually changed
+           (insert-existing / delete-missing are no-ops).
+        2. The maintained :class:`AdjacencyBlockProfile` is PATCHED --
+           ±1 on the block cells the changed edges land in -- which is
+           bitwise what ``from_graph`` on the new topology would count
+           (pinned in ``tests/test_streaming_delta.py``).
+        3. ``analyzer.delta_replan_mask`` re-runs the K2P selection on
+           the touched cells only and reports which ones crossed a
+           primitive boundary -- the cells a planner must re-decide;
+           density wiggle inside a primitive's band costs nothing.
+        4. ``graph_version`` bumps (only if the delta changed anything),
+           so in-flight requests sampled from the old topology are
+           delivered but never cached, and the cache evicts exactly the
+           entries whose sampled neighborhoods touch a changed vertex.
+        """
+        new_graph, delta = self.graph.apply_delta(edge_inserts, edge_deletes)
+        old_dens = self.profile.densities()
+        new_profile, touched = self.profile.apply_delta(delta)
+        new_dens = new_profile.densities()
+        # the rhs fiber of an Aggregate is a (dense) feature panel; one
+        # dense column reproduces plan_codes' selection per lhs cell.
+        replan = analyzer.delta_replan_mask(
+            self.strategy, old_dens, new_dens,
+            np.ones((old_dens.shape[1], 1), np.float32),
+            self.cost_model, touched=touched)
+        self.graph = new_graph
+        self.profile = new_profile
+        invalidated = 0
+        if delta.n_changed:
+            self.graph_version += 1
+            if self.cache is not None:
+                invalidated = self.cache.invalidate(delta.touched_vertices)
+        return DeltaReport(
+            delta=delta, graph_version=self.graph_version,
+            cache_invalidated=invalidated,
+            touched_cells=int(np.count_nonzero(touched)),
+            replan_cells=int(np.count_nonzero(replan)),
+            total_cells=int(touched.size))
 
     @property
     def inflight(self) -> int:
@@ -467,6 +559,14 @@ class MiniBatchServeEngine:
                 for qt in waiting[vertex]:
                     qt._fill(vertex, row)
         return out
+
+    def apply_delta(self, edge_inserts: Sequence = (),
+                    edge_deletes: Sequence = ()) -> DeltaReport:
+        """Stream an edge delta into the served graph; see
+        :meth:`MiniBatchPlanner.apply_delta`.  Subsequent queries sample
+        the new topology; cached rows whose neighborhoods touched a
+        changed edge are already evicted when this returns."""
+        return self.planner.apply_delta(edge_inserts, edge_deletes)
 
     def oracle_queries(self, queries: Sequence[Sequence[int]]
                        ) -> List[np.ndarray]:

@@ -209,6 +209,25 @@ class Ticket(int):
       result (queue backlog pack + calibrated own-wave wall);
     * ``bucket``, ``priority``, ``tenant``, ``deadline`` -- the
       admission-time classification, echoed back.
+
+    The verdict bands, in classification order (``slack`` is
+    ``deadline - now``, infinite for best-effort requests; ``W`` is
+    ``predicted_wall``; ``m`` is the server's ``admit_margin >= 1``):
+
+    ===================================  ===============================
+    band                                 verdict
+    ===================================  ===============================
+    queue full (``shed="capacity"``      ``"shed"`` (before any
+    and ``pending >= max_pending``)      prediction is consulted)
+    ``slack < W`` (a predicted miss)     ``"shed"`` under
+                                         ``shed="predicted-miss"``,
+                                         else ``"admit-at-risk"``
+    ``W <= slack < m * W``               ``"admit-at-risk"`` -- admitted,
+                                         but with less than the margin's
+                                         headroom; first to go if
+                                         backlog pressure degrades
+    ``slack >= m * W``                   ``"admit"``
+    ===================================  ===============================
     """
 
     def __new__(cls, seq: int, *, bucket: int = 0,
@@ -604,10 +623,12 @@ class ContinuousGraphServer:
         vertex's subgraph and the request is submitted through the normal
         admission door (deadline/priority/tenant apply per seed request;
         a shed seed is recorded on ``ticket.shed_seeds`` and its row
-        stays NaN).  Coalescing is version-checked: an in-flight request
-        that gathered features before a store update is NOT joined by a
-        query submitted after it -- the new query gets a fresh
-        post-update request, so no result ever reflects features older
+        stays NaN).  Coalescing is version-checked on BOTH axes of
+        mutation: an in-flight request that gathered features before a
+        store update, or that was sampled before an edge delta bumped
+        the planner's ``graph_version``, is NOT joined by a query
+        submitted after it -- the new query gets a fresh post-update
+        request, so no result ever reflects features or topology older
         than its own submission.
 
         Returns a :class:`~repro.serving.minibatch.QueryTicket`; rows
@@ -637,7 +658,9 @@ class ContinuousGraphServer:
             if rid is not None and rid in self._query_waiters:
                 inflight = planner.inflight_request(rid)
                 if (inflight is not None and inflight.store_version
-                        == planner.store.version):
+                        == planner.store.version
+                        and inflight.graph_version
+                        == planner.graph_version):
                     self._query_waiters[rid].append(qt)
                     continue
             req = planner.request_for(v)
@@ -652,6 +675,26 @@ class ContinuousGraphServer:
             self._query_waiters[req.request_id] = [qt]
             self._inflight_seed[v] = req.request_id
         return qt
+
+    def apply_delta(self, edge_inserts: Sequence = (),
+                    edge_deletes: Sequence = ()):
+        """Stream an edge delta into the served giant graph (DESIGN.md
+        §17): delegates to
+        :meth:`~repro.serving.minibatch.MiniBatchPlanner.apply_delta`
+        and returns its :class:`~repro.serving.minibatch.DeltaReport`.
+
+        Safe mid-stream: requests already in flight were sampled from
+        the old topology and still deliver (their snapshot is
+        consistent), but their rows are never cached and later queries
+        never coalesce onto them -- ``submit_query`` re-checks the
+        planner's ``graph_version`` at the coalescing point.
+        """
+        if self.minibatch is None:
+            raise ValueError(
+                "apply_delta needs a minibatch planner: "
+                "ContinuousGraphServer(engine, "
+                "minibatch=MiniBatchPlanner(graph, store, ...))")
+        return self.minibatch.apply_delta(edge_inserts, edge_deletes)
 
     def _route(self, results: List[GraphResult]) -> List[GraphResult]:
         """Split a tick's delivered results: planner-issued seed requests

@@ -1,0 +1,163 @@
+"""Dynamic attention sparsity (GAT): the per-head, per-input operand
+density the planner exploits (DESIGN.md §17).
+
+What this file pins beyond the model sweeps (``test_fused_model`` /
+``test_graph_serving`` parametrize over ``GNN_MODELS`` and already cover
+GAT's fused-vs-per-kernel and serving-vs-oracle bitwise parity):
+
+* ``attention_adjacency`` semantics: masked softmax restricted to the
+  adjacency support, rows sum to 1 pre-threshold, all-zero rows (bucket
+  padding) stay exactly zero, thresholding drops weights to exact zero,
+  and the writeback profile counts the POST-threshold support.
+* per-head distinctness: two heads of the same layer, same input, produce
+  DIFFERENT attention supports -- the fused walk profiles each head's
+  writeback separately, so the per-head aggregates plan from per-head
+  densities (the tentpole claim).
+* sparsity drives the plan: raising the threshold sparsifies the
+  attention operand and the dynamic K2P plan for the downstream
+  aggregate changes with it (denser bands -> GEMM, sparser -> SpMM/SKIP).
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compiler, runtime
+from repro.core.dynasparse import attention_adjacency
+from repro.core.perf_model import Primitive
+from repro.data import graphs as graph_data
+from repro.models import gnn as gnn_models
+
+
+def _gat_bundle(threshold=0.02, heads=2, seed=2):
+    g = graph_data.materialize("CO", scale=0.12, seed=seed)
+    spec = compiler.GNNModelSpec(
+        "gat", [g.spec.f_in, g.spec.hidden, g.spec.n_classes],
+        gat_heads=heads, att_threshold=threshold)
+    meta = compiler.GraphMeta("CO", g.spec.n_vertices, g.spec.n_edges,
+                              g.spec.f_in)
+    tensors = {"A": jnp.asarray(g.a_gcn), "A_mean": jnp.asarray(g.a_mean),
+               "H0": jnp.asarray(g.h0)}
+    cm = compiler.compile_model(spec, meta, n_cc=7, tensors=tensors,
+                                align=16, on_chip_bytes=256 * 1024)
+    for name, w in gnn_models.init_weights(cm, seed=seed).items():
+        tensors[name] = jnp.asarray(w)
+    return cm, tensors
+
+
+# -- attention_adjacency unit semantics -------------------------------------
+
+def test_attention_softmax_support_and_padding():
+    rng = np.random.default_rng(0)
+    n, f = 40, 8
+    a = (rng.random((n, n)) < 0.2).astype(np.float32)
+    a[-5:] = 0.0                              # bucket-padding rows
+    z = rng.normal(size=(n, f)).astype(np.float32)
+    asrc = rng.normal(size=(f, 1)).astype(np.float32)
+    adst = rng.normal(size=(f, 1)).astype(np.float32)
+    res = attention_adjacency(jnp.asarray(a), jnp.asarray(z),
+                              jnp.asarray(asrc), jnp.asarray(adst),
+                              threshold=0.0, out_block=(16, 16))
+    alpha = np.asarray(res.out)
+    assert alpha.shape == (n, n)
+    # weights live ONLY on the support; un-thresholded rows sum to 1
+    assert (alpha[a == 0] == 0.0).all()
+    live = a[:-5].sum(axis=1) > 0
+    np.testing.assert_allclose(alpha[:-5][live].sum(axis=1), 1.0, atol=1e-5)
+    # padding rows are exactly zero -> density 0 -> SKIP downstream
+    assert (alpha[-5:] == 0.0).all()
+    # the writeback profile counts the actual output support
+    from repro.core import profiler
+    np.testing.assert_array_equal(
+        np.asarray(res.out_counts),
+        np.asarray(profiler.block_counts(res.out, (16, 16))))
+
+
+def test_attention_threshold_drops_to_exact_zero():
+    rng = np.random.default_rng(1)
+    n, f = 32, 6
+    a = (rng.random((n, n)) < 0.5).astype(np.float32)
+    z = rng.normal(size=(n, f)).astype(np.float32)
+    asrc = rng.normal(size=(f, 1)).astype(np.float32)
+    adst = rng.normal(size=(f, 1)).astype(np.float32)
+    args = (jnp.asarray(a), jnp.asarray(z), jnp.asarray(asrc),
+            jnp.asarray(adst))
+    free = np.asarray(attention_adjacency(*args, threshold=0.0,
+                                          out_block=(16, 16)).out)
+    cut = np.asarray(attention_adjacency(*args, threshold=0.05,
+                                         out_block=(16, 16)).out)
+    kept = cut != 0
+    assert kept.sum() < (free != 0).sum()     # something was dropped
+    assert (cut[~kept] == 0.0).all()          # dropped -> exact zero
+    np.testing.assert_array_equal(cut[kept], free[kept])  # kept untouched
+    assert (free[kept] > 0.05).all()
+
+
+# -- per-head distinctness through the fused walk ---------------------------
+
+def test_per_head_attention_densities_differ():
+    """Two heads, same layer, same input: independently-initialized
+    attention vectors concentrate differently, so each head's thresholded
+    support -- the operand the per-head aggregate plans from -- has a
+    different density profile."""
+    cm, tensors = _gat_bundle()
+    fused = runtime.FusedModelExecutor(keep_codes=True,
+                                       keep_intermediates=True)
+    env, _ = fused.run(cm, tensors)
+    d1 = np.asarray(fused.profiled_densities["T1h1"])
+    d2 = np.asarray(fused.profiled_densities["T1h2"])
+    assert d1.shape == d2.shape
+    assert not np.array_equal(d1, d2), (
+        "both heads produced identical density profiles")
+    # attention sparsified the operand below the full support density
+    support = (np.asarray(tensors["A"]) != 0).mean()
+    assert np.asarray(env["T1h1"]).astype(bool).mean() < support
+    # the per-head aggregates were planned (per-head code grids exist and
+    # the two heads' plans are per-head, not shared)
+    assert "G1h1" in fused.planned_codes and "H1" in fused.planned_codes
+    assert fused.planned_codes["G1h1"].shape == \
+        fused.planned_codes["H1"].shape
+
+
+def test_attention_sparsity_drives_the_plan():
+    """Same graph, same weights, higher threshold -> sparser attention
+    operand -> the dynamic plan for the head's aggregate moves toward
+    SKIP/sparse primitives.  This is the paper's dynamic-sparsity loop
+    closed over an INPUT-dependent operand."""
+    codes = {}
+    nnz = {}
+    for threshold in (0.0, 0.6):
+        cm, tensors = _gat_bundle(threshold=threshold, heads=1)
+        eng = runtime.DynasparseEngine(keep_codes=True)
+        env, _ = eng.run(cm, tensors)
+        codes[threshold] = eng.planned_codes["H1"]   # head 1's aggregate
+        nnz[threshold] = int(np.asarray(env["T1h1"]).astype(bool).sum())
+    assert nnz[0.6] < nnz[0.0]
+    assert not np.array_equal(codes[0.6], codes[0.0]), (
+        "plan did not react to attention sparsity")
+    skips = {t: int((c == int(Primitive.SKIP)).sum())
+             for t, c in codes.items()}
+    assert skips[0.6] >= skips[0.0]
+
+
+def test_gat_spec_knobs_change_signature():
+    """att_threshold/att_slope are part of the executor cache signature:
+    two specs differing only there must not share a cached program."""
+    cm_a, _ = _gat_bundle(threshold=0.02)
+    cm_b, _ = _gat_bundle(threshold=0.3)
+    ks_a = [k for k in cm_a.graph.kernels if k.att_src is not None]
+    ks_b = [k for k in cm_b.graph.kernels if k.att_src is not None]
+    assert ks_a and len(ks_a) == len(ks_b)
+    assert all(k.att_threshold == 0.02 for k in ks_a)
+    assert all(k.att_threshold == 0.3 for k in ks_b)
+    sig_a = runtime.FusedModelExecutor()._signature(cm_a, {})
+    sig_b = runtime.FusedModelExecutor()._signature(cm_b, {})
+    assert sig_a != sig_b
+
+
+def test_build_sim_rejects_gat():
+    with pytest.raises(NotImplementedError):
+        gnn_models.build_sim("gat", "CO")
+    spec = gnn_models.make_model_spec("gat", 16, 8, 4)
+    assert dataclasses.asdict(spec)["model"] == "gat"

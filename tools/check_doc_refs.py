@@ -33,10 +33,14 @@ PUBLIC = [
     ("repro.core.runtime", ["DynasparseEngine", "FusedModelExecutor",
                             "simulate_inference", "propagate_stats",
                             "InferenceReport"]),
+    # attention_adjacency is the GAT edge-softmax both engines execute
+    # (DESIGN 17 / README "Serving a mutating graph")
     ("repro.core.dynasparse", ["dynasparse_matmul", "DynasparseResult",
-                               "dynasparse_dense_equivalent"]),
+                               "dynasparse_dense_equivalent",
+                               "attention_adjacency"]),
     ("repro.core.analyzer", ["plan_codes", "plan_codes_from_profiles",
-                             "plan_format", "STRATEGIES"]),
+                             "plan_format", "STRATEGIES",
+                             "delta_replan_mask"]),
     # the format-aware planning surface (DESIGN 13 / README "Format-aware
     # aggregation")
     ("repro.core.perf_model", ["Format", "Primitive", "TPUCostModel",
@@ -81,13 +85,16 @@ PUBLIC = [
     ("repro.data.graphs", ["normalize_adjacency", "materialize"]),
     # the giant-graph mini-batch surface (DESIGN 16 / README "Mini-batch
     # serving over a giant graph")
+    # the streaming-delta surface rides along (DESIGN 17 / README
+    # "Serving a mutating graph")
     ("repro.data.sampling", ["HostGraph", "SampledSubgraph",
                              "sample_subgraph", "powerlaw_host_graph",
-                             "vertex_seed"]),
+                             "vertex_seed", "GraphDelta",
+                             "AdjacencyBlockProfile"]),
     ("repro.serving.minibatch", ["FeatureStore", "VertexCache",
                                  "CacheStats", "SeedRequest",
                                  "MiniBatchPlanner", "MiniBatchServeEngine",
-                                 "QueryTicket"]),
+                                 "QueryTicket", "DeltaReport"]),
 ]
 
 # bound methods the docs name explicitly (an attribute rename must break
@@ -101,9 +108,15 @@ PUBLIC_ATTRS = [
     ("repro.serving.scheduler", "ContinuousGraphServer",
      ["submit", "submit_query", "poll", "drain", "warmup", "wait_bound",
       "lane_estimate", "group_estimate", "from_config", "backlog_bound",
-      "admission_estimate"]),
+      "admission_estimate", "apply_delta"]),
     ("repro.serving.minibatch", "MiniBatchServeEngine",
-     ["serve_queries", "oracle_queries", "report"]),
+     ["serve_queries", "oracle_queries", "report", "apply_delta"]),
+    ("repro.serving.minibatch", "MiniBatchPlanner",
+     ["apply_delta", "request_for", "complete", "lookup", "sample"]),
+    ("repro.data.sampling", "HostGraph", ["apply_delta", "neighbors"]),
+    ("repro.data.sampling", "AdjacencyBlockProfile",
+     ["from_graph", "apply_delta", "densities"]),
+    ("repro.core.profiler", "BlockProfile", ["pool_rows", "pool_cols"]),
     ("repro.serving.minibatch", "FeatureStore",
      ["gather", "gather_into", "update", "add_listener"]),
     ("repro.serving.minibatch", "VertexCache",
